@@ -1,0 +1,36 @@
+"""Paper Tables 6/7: AutoFLSat — effect of #clusters and epochs/round on
+accuracy, round duration, idle time, total training time."""
+from __future__ import annotations
+
+from benchmarks.common import run_sim
+
+
+def run(fast=True):
+    rows = []
+    for clusters in (2, 3, 4):
+        for epochs in (2, 5):
+            res = run_sim("autoflsat", clusters, 5, 3, rounds=5,
+                          dataset="femnist", epochs=epochs)
+            s = res.summary()
+            rows.append({
+                "clusters": clusters, "epochs": epochs,
+                "acc_pct": round(100 * s["best_acc"], 2),
+                "round_min": round(s["mean_round_h"] * 60, 2),
+                "idle_min": round(s["mean_idle_h"] * 60, 2),
+                "total_h": s["total_h"],
+                "pair_passes": clusters * (clusters - 1) // 2,
+            })
+    # eurosat (Table 7)
+    for clusters in (2, 4):
+        res = run_sim("autoflsat", clusters, 5, 3, rounds=5,
+                      dataset="eurosat", epochs_mode="auto")
+        s = res.summary()
+        rows.append({
+            "clusters": clusters, "epochs": "auto",
+            "acc_pct": round(100 * s["best_acc"], 2),
+            "round_min": round(s["mean_round_h"] * 60, 2),
+            "idle_min": round(s["mean_idle_h"] * 60, 2),
+            "total_h": s["total_h"],
+            "pair_passes": clusters * (clusters - 1) // 2,
+        })
+    return rows

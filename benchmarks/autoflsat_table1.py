@@ -1,0 +1,46 @@
+"""Paper Table 1: AutoFLSat (4 clusters) vs leading FL-in-space alternatives
+on FEMNIST + CIFAR-10 — accuracy and total training time to convergence.
+
+The published competitors (NomaFedHAP, FedLEO, FedSat, FedSpace) are cited
+as literature numbers in the paper; here the space-ified suite provides the
+in-simulator baselines (FedSat ~ FedAvgSch periodic-availability async
+analogue; FedSpace ~ FedBuff with GS parameter servers) plus the paper's own
+published row values for context."""
+from __future__ import annotations
+
+from benchmarks.common import run_sim
+
+PAPER_ROWS = [
+    # (algorithm, dataset, accuracy %, training time h) — from Table 1
+    ("paper:AutoFLSat(4cl)", "FEMNIST", 83.01, 21.28),
+    ("paper:NomaFedHAP", "nonIID-MNIST", 82.73, 24.0),
+    ("paper:FedLEO", "nonIID-MNIST", 84.69, 36.0),
+    ("paper:FedSat", "nonIID-MNIST", 85.15, 24.0),
+    ("paper:FedSpace", "nonIID-MNIST", 52.67, 72.0),
+    ("paper:AutoFLSat(4cl)", "CIFAR-10", 82.46, 15.6),
+    ("paper:FedSat", "CIFAR-10", 81.18, 24.0),
+    ("paper:FedSpace", "CIFAR-10", 39.41, 72.0),
+]
+
+
+def run(fast=True):
+    rows = [{"alg": a, "dataset": d, "acc_pct": acc, "train_time_h": t,
+             "source": "paper"} for a, d, acc, t in PAPER_ROWS]
+    for ds in ("femnist", "cifar10"):
+        sims = {
+            "AutoFLSat(4cl)": run_sim("autoflsat", 4, 5, 3, rounds=6,
+                                      dataset=ds, epochs_mode="auto"),
+            "FedSat~FedAvgSch": run_sim("fedavg_sch", 4, 5, 3, rounds=6,
+                                        dataset=ds),
+            "FedSpace~FedBuff": run_sim("fedbuff", 4, 5, 3, rounds=6,
+                                        dataset=ds),
+        }
+        for name, res in sims.items():
+            rows.append({
+                "alg": name, "dataset": ds,
+                "acc_pct": round(100 * res.best_accuracy(), 2),
+                "train_time_h": round(res.total_training_time_h(), 2),
+                "source": "flystack-sim",
+            })
+    # headline claim check: AutoFLSat total time vs best GS-bound baseline
+    return rows

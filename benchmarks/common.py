@@ -1,0 +1,45 @@
+"""Shared helpers for the per-paper-table benchmarks."""
+from __future__ import annotations
+
+import functools
+
+from repro.core.contact_plan import build_contact_plan
+from repro.core.spaceify import FLConfig
+from repro.sim.flystack import FLySTacK, SimConfig
+from repro.sim.hardware import SMALLSAT_SBAND
+
+
+@functools.lru_cache(maxsize=32)
+def cached_plan(clusters, spc, gs, days=1.5, dt=60.0, isl=False):
+    return build_contact_plan(clusters, spc, gs, horizon_s=days * 86400,
+                              dt_s=dt, with_isl_pairs=isl)
+
+
+def run_sim(algorithm, clusters, spc, gs, rounds=4, dataset="femnist",
+            days=1.5, epochs=2, n_per_client=32, quant_bits=10,
+            epochs_mode="fixed", seed=0):
+    plan = cached_plan(clusters, spc, gs, days=days,
+                       isl=(algorithm == "autoflsat"))
+    cfg = SimConfig(algorithm=algorithm, n_clusters=clusters,
+                    sats_per_cluster=spc, n_ground_stations=gs,
+                    horizon_days=days, dataset=dataset,
+                    n_per_client=n_per_client, epochs_mode=epochs_mode,
+                    seed=seed,
+                    # select HALF the constellation so FLSchedule has a real
+                    # choice to optimize (C == K makes selection a no-op)
+                    fl=FLConfig(clients_per_round=max(2, clusters * spc // 2),
+                                epochs=epochs, max_rounds=rounds, lr=0.05,
+                                max_local_epochs=8, quant_bits=quant_bits,
+                                eval_every=max(rounds // 2, 1)))
+    return FLySTacK(cfg, hw=SMALLSAT_SBAND, plan=plan).run()
+
+
+def print_rows(title, rows):
+    print(f"\n## {title}")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

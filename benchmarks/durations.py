@@ -1,0 +1,29 @@
+"""Paper Fig. 11: round-duration distribution (min/mean/max) per algorithm —
+the violin-plot summary showing scheduling + ISL gains."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import run_sim
+
+ALGS = ("fedavg", "fedavg_sch", "fedavg_intrasl", "fedprox", "fedprox_sch",
+        "fedbuff", "autoflsat")
+
+
+def run(fast=True):
+    rows = []
+    for alg in ALGS:
+        spc = 10 if alg.endswith("intrasl") else 5    # Intra-SL needs >=10
+        res = run_sim(alg, 2, spc, 3, rounds=4)
+        durs = [r.duration_s / 3600 for r in res.records]
+        idles = [r.idle_s / 3600 for r in res.records]
+        if not durs:
+            durs = idles = [float("nan")]
+        rows.append({
+            "alg": alg, "sats": 2 * spc,
+            "dur_min_h": round(min(durs), 3),
+            "dur_mean_h": round(float(np.mean(durs)), 3),
+            "dur_max_h": round(max(durs), 3),
+            "idle_mean_h": round(float(np.mean(idles)), 3),
+        })
+    return rows

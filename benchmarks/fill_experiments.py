@@ -1,0 +1,81 @@
+"""Fill EXPERIMENTS.md placeholder markers with tables generated from the
+dry-run artifacts.  Usage: PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import io
+import json
+import pathlib
+from contextlib import redirect_stdout
+
+from benchmarks.report import main as report_main
+
+MD = pathlib.Path("EXPERIMENTS.md")
+D = pathlib.Path("experiments/dryrun")
+
+
+def table(tag=""):
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        report_main(tag)
+    return buf.getvalue()
+
+
+def hfl_table():
+    lines = ["| arch | tag | local-step pod-crossing link B/dev "
+             "| sync link B/dev | sync collectives |",
+             "|---|---|---|---|---|"]
+    for f in sorted(D.glob("*hfl*.json")):
+        r = json.loads(f.read_text())
+        if r["status"] != "ok":
+            continue
+        colls = ", ".join(f"{k}:{v:.2e}"
+                          for k, v in r.get("sync_collective_bytes_per_dev",
+                                            {}).items())
+        lines.append(
+            f"| {r['arch']} | {r['tag']} "
+            f"| {r['collective_link_bytes_per_dev']:.3e} "
+            f"| {r.get('sync_link_bytes_per_dev', 0):.3e} | {colls} |")
+    return "\n".join(lines) + "\n"
+
+
+def dryrun_summary():
+    rows = {}
+    compile_s = []
+    for f in sorted(D.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("tag"):
+            continue
+        key = (r["mesh"], r["status"])
+        rows[key] = rows.get(key, 0) + 1
+        if r["status"] == "ok":
+            compile_s.append(r["compile_s"])
+    lines = ["| mesh | ok | skipped (by design) |", "|---|---|---|"]
+    for mesh in ("single", "multi"):
+        lines.append(f"| {mesh} | {rows.get((mesh, 'ok'), 0)} "
+                     f"| {rows.get((mesh, 'skipped'), 0)} |")
+    lines.append("")
+    if compile_s:
+        lines.append(f"compile times: min {min(compile_s):.1f}s / "
+                     f"median {sorted(compile_s)[len(compile_s) // 2]:.1f}s / "
+                     f"max {max(compile_s):.1f}s")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    text = MD.read_text()
+    blocks = {
+        "<!-- DRYRUN-BASELINE-TABLE -->": dryrun_summary(),
+        "<!-- ROOFLINE-BASELINE-TABLE -->": table(""),
+        "<!-- ROOFLINE-OPT-TABLE -->": table("opt"),
+        "<!-- HFL-TABLE -->": hfl_table(),
+    }
+    for marker, content in blocks.items():
+        if marker in text:
+            text = text.replace(marker, marker + "\n\n" + content, 1)
+    MD.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 3/13/14/15: satellite-configuration-space heatmaps — accuracy,
+FL round duration, and idle time over (clusters x sats/cluster x ground
+stations), for space-ified algorithms with/without augmentations.
+(Reduced grid for CPU budget; the qualitative findings of §5.1 must hold.)"""
+from __future__ import annotations
+
+from benchmarks.common import run_sim
+
+GRID_CLUSTERS = (1, 2)
+GRID_SPC = (2, 5)
+GRID_GS = (1, 3, 5)
+ALGS = ("fedavg", "fedavg_sch")
+
+
+def run(fast=True):
+    rows = []
+    for alg in ALGS:
+        for c in GRID_CLUSTERS:
+            for spc in GRID_SPC:
+                for gs in GRID_GS:
+                    if c * spc < 2:
+                        continue
+                    res = run_sim(alg, c, spc, gs, rounds=3)
+                    s = res.summary()
+                    rows.append({
+                        "alg": alg, "clusters": c, "sats_per_cluster": spc,
+                        "ground_stations": gs, "rounds": s["rounds"],
+                        "best_acc": s["best_acc"],
+                        "round_h": s["mean_round_h"],
+                        "idle_h": s["mean_idle_h"],
+                    })
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 9: inter-plane communication window length vs relative plane
+angle, and the minimum ISL data rate to push a ResNet18-class model through
+one window (App. C.6: ~20 KB/s at full precision)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.visibility import interplane_los_series, windows_from_bool
+
+RESNET18_BYTES = 11.7e6 * 4          # ~11.7M params fp32
+
+
+def run(fast=True):
+    rows = []
+    for n_clusters in (2, 3, 4, 6, 9):
+        alpha_deg = 180.0 / n_clusters           # adjacent-plane angle (star)
+        c = WalkerStar(n_clusters, 4, altitude_m=400_000.0)
+        raan, phase, _ = satellite_elements(c)
+        times = np.arange(0.0, 2 * c.period_s, 10.0)
+        los = interplane_los_series(c, raan, phase,
+                                    np.radians(90.0), times, 0, 4)
+        wins = windows_from_bool(los, times)
+        frac = float(np.mean(los))
+        longest = max((e - s for s, e in wins), default=0.0)
+        min_rate_kbs = (RESNET18_BYTES / longest / 1e3) if longest else None
+        rows.append({
+            "clusters": n_clusters,
+            "plane_angle_deg": round(alpha_deg, 1),
+            "los_fraction": round(frac, 3),
+            "persistent": frac > 0.99,
+            "longest_window_min": round(longest / 60, 1),
+            "min_rate_resnet18_kBps": round(min_rate_kbs, 1)
+            if min_rate_kbs else "n/a",
+        })
+    return rows

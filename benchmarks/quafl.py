@@ -1,0 +1,39 @@
+"""Paper Table 3 (App. C.5): QuAFL quantization — precision vs accuracy vs
+wall-clock time to converge on the FLyCube constellation (single cluster,
+5 satellites, radio-rate-bound)."""
+from __future__ import annotations
+
+from repro.core.quantize import quantized_bytes, roundtrip_error
+from repro.core.spaceify import FLConfig
+from repro.sim.flystack import FLySTacK, SimConfig
+from repro.sim.hardware import FLYCUBE
+from benchmarks.common import cached_plan
+
+
+def run(fast=True):
+    rows = []
+    for bits in (32, 10, 8):
+        cfg = SimConfig(algorithm="fedbuff", n_clusters=1,
+                        sats_per_cluster=5, n_ground_stations=3,
+                        horizon_days=6.0, dataset="eurosat", n_per_client=32,
+                        fl=FLConfig(clients_per_round=5, epochs=2,
+                                    max_rounds=6, buffer_size=3, lr=0.05,
+                                    max_local_epochs=6,
+                                    quant_bits=0 if bits == 32 else bits))
+        plan = cached_plan(1, 5, 3, days=6.0)
+        res = FLySTacK(cfg, hw=FLYCUBE, plan=plan).run()
+        import jax
+        from repro.models.small import MODELS
+        init_fn, _ = MODELS["cnn"]
+        params = init_fn(jax.random.PRNGKey(0), (64, 64, 3), 10)
+        rows.append({
+            "precision_bits": bits,
+            "model_kb": round(quantized_bytes(
+                params, bits if bits < 32 else 32) / 1024, 1),
+            "quant_rel_error": round(roundtrip_error(params, bits), 5)
+            if bits < 32 else 0.0,
+            "rounds": len(res.records),
+            "acc_pct": round(100 * res.best_accuracy(), 2),
+            "wctc_h": round(res.total_training_time_h(), 2),
+        })
+    return rows

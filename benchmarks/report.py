@@ -1,0 +1,54 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts.  Usage: PYTHONPATH=src python -m benchmarks.report [tag]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+D = pathlib.Path("experiments/dryrun")
+
+
+def fmt(r):
+    if r["status"] != "ok":
+        return None
+    comp = r["hlo_flops_per_dev"] / PEAK_FLOPS_BF16
+    mem = r["hlo_bytes_per_dev"] / HBM_BW
+    coll = r["collective_link_bytes_per_dev"] / ICI_BW
+    dom = max({"compute": comp, "memory": mem, "collective": coll}.items(),
+              key=lambda kv: kv[1])[0]
+    ratio = r["model_flops_global"] / r["n_devices"] / max(
+        r["hlo_flops_per_dev"], 1)
+    return (comp, mem, coll, dom, ratio,
+            r["mem_temp_bytes_per_dev"] / 2 ** 30, r["compile_s"])
+
+
+def main(tag=""):
+    sfx = f"__{tag}" if tag else ""
+    print(f"| arch | shape | mesh | compute s | memory s | collective s "
+          f"| bottleneck | 6ND/HLO | temp GiB | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for f in sorted(D.glob(f"*{sfx}.json")):
+        r = json.loads(f.read_text())
+        if (r.get("tag") or "") != tag:
+            continue
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — "
+                  f"| skipped | — | — | — |")
+            continue
+        v = fmt(r)
+        if v is None:
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| ERROR: {r.get('error', '')[:40]} |")
+            continue
+        comp, mem, coll, dom, ratio, temp, cs = v
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {comp:.2f} "
+              f"| {mem:.2f} | {coll:.2f} | {dom} | {ratio:.3f} "
+              f"| {temp:.1f} | {cs:.0f} |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "")

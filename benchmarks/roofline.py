@@ -1,0 +1,59 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the compiled dry-run artifacts in experiments/dryrun/.
+
+  compute_s    = HLO_FLOPs_per_dev / peak_FLOP/s          (197e12 bf16, v5e)
+  memory_s     = HLO_bytes_per_dev / HBM_bw               (819e9 B/s)
+  collective_s = link_bytes_per_dev / ICI_link_bw         (50e9 B/s)
+
+plus MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference) and the
+usefulness ratio MODEL_FLOPS_per_dev / HLO_FLOPs (remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DRYRUN_DIR = pathlib.Path("experiments/dryrun")
+
+
+def load_records(tag=None, mesh="single"):
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("mesh") != mesh:
+            continue
+        if (tag or "") != r.get("tag", ""):
+            continue
+        recs.append(r)
+    return recs
+
+
+def roofline_row(r):
+    if r["status"] == "skipped":
+        return {"arch": r["arch"], "shape": r["shape"],
+                "status": "skipped", "compute_s": "", "memory_s": "",
+                "collective_s": "", "bottleneck": "",
+                "model_vs_hlo": "", "note": r["reason"][:60]}
+    if r["status"] != "ok":
+        return {"arch": r["arch"], "shape": r["shape"], "status": "ERROR",
+                "compute_s": "", "memory_s": "", "collective_s": "",
+                "bottleneck": "", "model_vs_hlo": "",
+                "note": r.get("error", "")[:60]}
+    comp = r["hlo_flops_per_dev"] / PEAK_FLOPS_BF16
+    mem = r["hlo_bytes_per_dev"] / HBM_BW
+    coll = r["collective_link_bytes_per_dev"] / ICI_BW
+    terms = {"compute": comp, "memory": mem, "collective": coll}
+    dom = max(terms, key=terms.get)
+    model_per_dev = r["model_flops_global"] / r["n_devices"]
+    ratio = model_per_dev / max(r["hlo_flops_per_dev"], 1.0)
+    return {"arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "compute_s": round(comp, 4), "memory_s": round(mem, 4),
+            "collective_s": round(coll, 4), "bottleneck": dom,
+            "model_vs_hlo": round(ratio, 3),
+            "note": f"mem/dev={r['mem_temp_bytes_per_dev'] / 2**30:.1f}GiB"}
+
+
+def run(fast=True, mesh="single", tag=None):
+    return [roofline_row(r) for r in load_records(tag=tag, mesh=mesh)]

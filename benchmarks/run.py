@@ -1,0 +1,56 @@
+"""Benchmark harness: one section per paper table/figure (DESIGN.md §6).
+
+  PYTHONPATH=src python -m benchmarks.run            # all sections
+  PYTHONPATH=src python -m benchmarks.run power quafl  # a subset
+
+Each section prints CSV rows; the roofline section reads the dry-run
+artifacts (run `python -m repro.launch.dryrun` first for fresh numbers).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks.common import print_rows
+
+SECTIONS = [
+    ("power", "Table 2: FLyCube power modes & added OAP",
+     "benchmarks.power"),
+    ("quafl", "Table 3: QuAFL quantization precision sweep",
+     "benchmarks.quafl"),
+    ("interplane", "Fig 9: inter-plane windows vs plane angle",
+     "benchmarks.interplane"),
+    ("heatmaps", "Fig 3/13-15: configuration-space heatmaps",
+     "benchmarks.heatmaps"),
+    ("schedule_gain", "Fig 4/12: scheduling time-to-accuracy",
+     "benchmarks.schedule_gain"),
+    ("durations", "Fig 11: round-duration summary per algorithm",
+     "benchmarks.durations"),
+    ("autoflsat_table1", "Table 1: AutoFLSat vs leading alternatives",
+     "benchmarks.autoflsat_table1"),
+    ("autoflsat_sweep", "Tables 6/7: AutoFLSat cluster/epoch sweep",
+     "benchmarks.autoflsat_sweep"),
+    ("roofline", "Roofline: per (arch x shape) terms from the dry-run",
+     "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+    t0 = time.time()
+    for key, title, modname in SECTIONS:
+        if want and key not in want:
+            continue
+        mod = __import__(modname, fromlist=["run"])
+        t1 = time.time()
+        try:
+            rows = mod.run(fast=True)
+        except Exception as e:  # keep the harness going, report the failure
+            print(f"\n## {title}\nERROR: {type(e).__name__}: {e}")
+            continue
+        print_rows(f"{title}  [{time.time() - t1:.0f}s]", rows)
+    print(f"\ntotal: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Paper Fig. 4/12: scheduling's effect on time-to-accuracy — FedAvg vs
+FedAvgSch on the 5x10-like constellation (reduced to 2x5), per GS count."""
+from __future__ import annotations
+
+from benchmarks.common import run_sim
+
+
+def run(fast=True):
+    rows = []
+    for gs in (1, 3, 5):
+        for alg in ("fedavg", "fedavg_sch"):
+            res = run_sim(alg, 2, 5, gs, rounds=5)
+            tta = res.time_to_accuracy_h(0.6)
+            rows.append({
+                "alg": alg, "ground_stations": gs,
+                "rounds_done": len(res.records),
+                "best_acc": round(res.best_accuracy(), 4),
+                "mean_round_h": round(res.mean_round_duration_h(), 3),
+                "time_to_60pct_h": round(tta, 2) if tta else "n/a",
+            })
+    return rows

@@ -1,0 +1,67 @@
+"""Beyond-paper: AutoFLSat's hierarchy as a large-model training schedule.
+
+Trains a reduced qwen3-family LM with the hierarchical trainer: 2 "clusters"
+(pods) each holding their own replica, training locally on non-IID token
+streams, syncing parameters every H steps where H comes from a REAL simulated
+constellation's inter-satellite-link schedule. Compares against fully-
+synchronous training on the same total token budget.
+
+Run:  PYTHONPATH=src python examples/hierarchical_llm_train.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import hierarchy as H
+from repro.core.aggregation import pytree_bytes
+from repro.core.contact_plan import build_contact_plan
+from repro.data.tokens import synthetic_lm_batches
+from repro.optim.optimizers import AdamWConfig
+from repro.sim.hardware import SMALLSAT_SBAND
+from repro.train import steps as ST
+
+CFG = dataclasses.replace(get_smoke_config("qwen3-14b"),
+                          compute_dtype="float32", vocab=512)
+NC, STEPS, BATCH, SEQ = 2, 40, 4, 64
+OPT = AdamWConfig(lr=3e-3, warmup_steps=5)
+
+# --- derive H from orbital mechanics --------------------------------------
+state = H.init_hfl_state(jax.random.PRNGKey(0), CFG, NC)
+plan = build_contact_plan(NC, 10, 3, horizon_s=86400.0, dt_s=60.0,
+                          with_isl_pairs=True)
+h_sync = H.sync_interval_from_orbits(
+    plan, SMALLSAT_SBAND, pytree_bytes(state.params) / NC, step_time_s=5.0,
+    max_h=10)
+print(f"ISL schedule => cluster sync every H={h_sync} steps")
+
+local = jax.jit(H.make_hfl_local_step(CFG, OPT), donate_argnums=0)
+sync = jax.jit(H.make_cluster_sync(CFG, quant_bits=10), donate_argnums=0)
+
+streams = [list(synthetic_lm_batches(CFG.vocab, BATCH, SEQ, STEPS,
+                                     seed=31 * c)) for c in range(NC)]
+hfl_losses = []
+for i in range(STEPS):
+    hb = jax.tree.map(lambda *xs: jnp.stack(xs), *[s[i] for s in streams])
+    state, m = local(state, hb)
+    hfl_losses.append(float(m["loss"].mean()))
+    if (i + 1) % h_sync == 0:
+        state = sync(state)
+
+# --- fully synchronous reference (same token budget) -----------------------
+ref_state = ST.init_train_state(jax.random.PRNGKey(0), CFG)
+step = jax.jit(ST.make_train_step(CFG, OPT), donate_argnums=0)
+ref_losses = []
+for i in range(STEPS):
+    # sync baseline sees the union of both streams, alternating
+    ref_state, m = step(ref_state, streams[i % NC][i])
+    ref_losses.append(float(m["loss"]))
+
+print(f"hfl  (H={h_sync}, 10-bit QuAFL sync): "
+      f"loss {hfl_losses[0]:.3f} -> {hfl_losses[-1]:.3f}")
+print(f"sync (every-step all-reduce):        "
+      f"loss {ref_losses[0]:.3f} -> {ref_losses[-1]:.3f}")
+print(f"cross-pod syncs: hfl={STEPS // h_sync} vs sync={STEPS} "
+      f"(a {STEPS / max(STEPS // h_sync, 1):.0f}x cut in slow-axis "
+      f"collectives — the paper's round-duration insight at pod scale)")

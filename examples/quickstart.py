@@ -1,0 +1,43 @@
+"""Quickstart: the paper's pipeline end-to-end in ~2 minutes on CPU.
+
+1. Build a small Walker-star constellation + IGS ground stations and compute
+   real access windows from orbital mechanics.
+2. Space-ify FedAvg and train a CNN on non-IID synthetic FEMNIST across the
+   constellation (FLySTacK).
+3. Run AutoFLSat on the same constellation and compare round durations.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.contact_plan import build_contact_plan
+from repro.core.spaceify import FLConfig
+from repro.sim.flystack import FLySTacK, SimConfig
+from repro.sim.hardware import SMALLSAT_SBAND
+
+CLUSTERS, SPC, GS = 2, 5, 3
+
+print("== building constellation + access windows (STK-equivalent step) ==")
+plan = build_contact_plan(CLUSTERS, SPC, GS, horizon_s=2 * 86400,
+                          dt_s=30.0, with_isl_pairs=True)
+n_windows = sum(len(w) for w in plan.sat_windows)
+print(f"constellation: {CLUSTERS} clusters x {SPC} sats, {GS} ground "
+      f"stations, {n_windows} GS access windows over 2 days")
+
+fl = FLConfig(clients_per_round=5, epochs=2, max_rounds=8, lr=0.05,
+              max_local_epochs=10, quant_bits=10)
+
+results = {}
+for alg in ("fedavg", "fedavg_sch", "autoflsat"):
+    cfg = SimConfig(algorithm=alg, n_clusters=CLUSTERS, sats_per_cluster=SPC,
+                    n_ground_stations=GS, horizon_days=2.0,
+                    dataset="femnist", n_per_client=32, fl=fl)
+    res = FLySTacK(cfg, hw=SMALLSAT_SBAND, plan=plan).run()
+    results[alg] = res
+    s = res.summary()
+    print(f"{alg:12s} rounds={s['rounds']:3d} best_acc={s['best_acc']:.3f} "
+          f"mean_round={s['mean_round_h']:.2f}h idle={s['mean_idle_h']:.2f}h")
+
+base = results["fedavg_sch"].mean_round_duration_h()
+auto = results["autoflsat"].mean_round_duration_h()
+print(f"\nAutoFLSat round-duration reduction vs FedAvgSch: "
+      f"{100 * (1 - auto / base):.1f}%  (paper: 12.5-37.5% vs leading "
+      f"alternatives at constellation scale)")

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import restore_pytree, save_pytree
+
+__all__ = ["save_pytree", "restore_pytree"]

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    EncoderConfig,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    VisionConfig,
+    get_config,
+    get_smoke_config,
+    registry,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "EncoderConfig", "InputShape", "ModelConfig",
+    "MoEConfig", "SSMConfig", "VisionConfig", "get_config", "get_smoke_config",
+    "registry",
+]

@@ -1,0 +1,9 @@
+from repro.core.aggregation import inplace_aggregate, weighted_average
+from repro.core.quantize import (
+    dequantize_pytree,
+    quantize_pytree,
+    quantized_bytes,
+)
+
+__all__ = ["inplace_aggregate", "weighted_average", "quantize_pytree",
+           "dequantize_pytree", "quantized_bytes"]

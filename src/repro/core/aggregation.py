@@ -1,0 +1,51 @@
+"""Model aggregation: in-place (fixed-memory) weighted accumulation.
+
+The paper's FLyCubes use Flower's in-place aggregation to stay inside 512 MB
+(Fig. 7). ``inplace_aggregate`` reproduces those semantics: a running
+accumulator the size of ONE model, fed a stream of (params, weight); the
+Pallas kernel ``repro.kernels.quant_agg`` fuses the dequantize+accumulate
+step for quantized (QuAFL) updates on TPU.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_average(stacked_params, weights):
+    """stacked_params: pytree with leading client axis (K, ...); weights (K,)."""
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-9)
+
+    def avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return (leaf.astype(jnp.float32) * wb).sum(0).astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked_params)
+
+
+def inplace_aggregate(updates: Iterable[Tuple], template=None):
+    """Accumulate a stream of (params, weight) in fixed memory.
+
+    Returns the weighted average without ever materializing more than one
+    accumulator + one incoming model (Flower in-place semantics).
+    """
+    acc = None
+    total = 0.0
+    for params, w in updates:
+        w = float(w)
+        if acc is None:
+            acc = jax.tree.map(lambda p: p.astype(jnp.float32) * w, params)
+        else:
+            acc = jax.tree.map(lambda a, p: a + p.astype(jnp.float32) * w,
+                               acc, params)
+        total += w
+    if acc is None:
+        raise ValueError("no updates")
+    return jax.tree.map(lambda a: a / total, acc)
+
+
+def pytree_bytes(params, bits=32):
+    return sum(p.size for p in jax.tree_util.tree_leaves(params)) * bits / 8

@@ -1,0 +1,126 @@
+"""AutoFLSat (paper §3.3, Algorithm 2): fully autonomous hierarchical FL.
+
+Two-tier aggregation with NO central parameter server:
+  * tier 1 — each orbital cluster runs synchronous FL over its always-on
+    Intra-Satellite Links (every satellite trains e epochs, cluster model is
+    the data-weighted average);
+  * tier 2 — cluster models are exchanged over Inter-Satellite Links whenever
+    plane pairs have line-of-sight; the InterSLScheduler chains the
+    C(C-1)/2 pairwise passes needed for all-to-all sharing and derives the
+    per-round epoch budget e from the first/last comms record.
+
+Ground access is needed only to seed w_0 (and optionally to offload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_average
+from repro.core.client import local_sgd_clients
+from repro.core.contact_plan import ContactPlan
+from repro.core.spaceify import FLConfig, RoundRecord, SpaceifiedFL
+
+
+@dataclasses.dataclass
+class InterSLSchedule:
+    t_start: float
+    t_complete: float          # all pairwise exchanges done
+    epochs: int                # training budget derived from the schedule
+    passes: List[Tuple[int, int, float]]   # (ci, cj, t_exchange)
+
+
+class AutoFLSat(SpaceifiedFL):
+    name = "autoflsat"
+
+    def __init__(self, plan: ContactPlan, hw, dataset, cfg: FLConfig,
+                 epochs_mode: str = "fixed"):
+        super().__init__(plan, hw, dataset, cfg)
+        self.epochs_mode = epochs_mode       # "fixed" | "auto"
+        C = plan.constellation.n_clusters
+        self.n_clusters = C
+        # per-cluster models start from the seeded w_0
+        self.cluster_params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (C,) + p.shape), self.global_params)
+        self.cluster_acc: List[float] = []
+
+    # ------------------------------------------------------------------
+    def inter_sl_scheduler(self, t: float) -> Optional[InterSLSchedule]:
+        """Algorithm 2's InterSLScheduler: chain the C(C-1)/2 pair passes."""
+        C = self.n_clusters
+        tx = self.hw.tx_time(self.tx_bytes, "isl") * 2.0   # bidirectional
+        if C == 1:
+            e = self.cfg.epochs
+            t_done = t + self.hw.train_time(e)
+            return InterSLSchedule(t, t_done, e, [])
+        t_cur = t
+        passes = []
+        for ci in range(C):
+            for cj in range(ci + 1, C):
+                done = self.plan.transmit_over_pair(ci, cj, t_cur, tx)
+                if done is None:
+                    return None
+                passes.append((ci, cj, t_cur))
+                t_cur = done
+        if self.epochs_mode == "auto":
+            # epochs from first & last comms record (Algorithm 2)
+            e = max(1, int((t_cur - t) // self.hw.epoch_time_s))
+            e = min(e, self.cfg.max_local_epochs)
+        else:
+            e = self.cfg.epochs
+        return InterSLSchedule(t, t_cur, e, passes)
+
+    # ------------------------------------------------------------------
+    def run_round(self, r, t):
+        cfg, plan = self.cfg, self.plan
+        sched = self.inter_sl_scheduler(t)
+        if sched is None:
+            return None
+        e = sched.epochs
+        C = self.n_clusters
+        spc = plan.constellation.sats_per_cluster
+
+        # tier 1: synchronous intra-cluster FL (all satellites participate)
+        self.key, *keys = jax.random.split(self.key, C * spc + 1)
+        keys = jnp.stack(keys).reshape(C, spc, 2)
+        new_cluster_params = []
+        for c in range(C):
+            sats = np.arange(c * spc, (c + 1) * spc)
+            stacked = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[c], (spc,) + p[c].shape),
+                self.cluster_params)
+            trained = local_sgd_clients(
+                cfg.model, stacked, self.ds.x[sats], self.ds.y[sats],
+                keys[c], e, cfg.batch_size, cfg.lr)
+            new_cluster_params.append(
+                weighted_average(trained, np.full(spc, 1.0)))
+        stacked_clusters = jax.tree.map(
+            lambda *ls: jnp.stack(ls), *new_cluster_params)
+
+        # tier 2: all-to-all exchange -> constellation-wide model
+        self.global_params = weighted_average(
+            stacked_clusters, np.full(C, float(spc)))
+        self.cluster_params = jax.tree.map(
+            lambda g: jnp.broadcast_to(g, (C,) + g.shape), self.global_params)
+
+        # timing: training overlaps the exchange chain; the round ends when
+        # both the last pairwise pass and local training are done.
+        train_time = self.hw.train_time(e)
+        intra_comm = self.hw.tx_time(self.tx_bytes, "isl") * 2.0
+        t_train_done = t + train_time + intra_comm
+        t_round_end = max(sched.t_complete, t_train_done)
+        idle = max(t_round_end - t_train_done, 0.0)
+        acc = self.evaluate() if r % cfg.eval_every == 0 else \
+            (self.records[-1].accuracy if self.records else 0.0)
+        # cluster-model divergence (paper §5.2): per-cluster accuracies
+        return RoundRecord(r, t, t_round_end, t_round_end - t, idle,
+                           intra_comm * 2
+                           + len(sched.passes)
+                           * self.hw.tx_time(self.tx_bytes, "isl") * 2.0 / max(C, 1),
+                           train_time, acc,
+                           list(range(plan.constellation.n_sats)),
+                           epochs=float(e))

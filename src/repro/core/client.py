@@ -1,0 +1,73 @@
+"""On-board local training (ClientUpdate in Algorithms 1-4).
+
+``local_sgd`` runs E epochs of minibatch SGD, optionally with the FedProx
+proximal term mu/2 * ||w - w_global||^2. It is jit-compiled and vmapped
+across the satellites selected in a round (stacked client data)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.small import MODELS, xent_loss
+
+
+def _one_epoch(apply_fn, params, x, y, lr, mu, global_params, batch_size, key):
+    n = x.shape[0]
+    n_batches = max(n // batch_size, 1)
+    perm = jax.random.permutation(key, n)
+    xs = x[perm][:n_batches * batch_size].reshape(
+        n_batches, batch_size, *x.shape[1:])
+    ys = y[perm][:n_batches * batch_size].reshape(n_batches, batch_size)
+
+    def loss(p, xb, yb):
+        l = xent_loss(apply_fn, p, xb, yb)
+        if global_params is not None:          # FedProx proximal term
+            prox = sum(jnp.sum((a - b) ** 2) for a, b in zip(
+                jax.tree_util.tree_leaves(p),
+                jax.tree_util.tree_leaves(global_params)))
+            l = l + 0.5 * mu * prox
+        return l
+
+    def body(p, xy):
+        xb, yb = xy
+        g = jax.grad(loss)(p, xb, yb)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g), None
+
+    params, _ = jax.lax.scan(body, params, (xs, ys))
+    return params
+
+
+@partial(jax.jit, static_argnames=("model", "batch_size", "mu_on"))
+def local_sgd(model: str, params, x, y, key, epochs, batch_size: int,
+              lr: float, mu: float = 0.0, mu_on: bool = False,
+              global_params=None):
+    """Train one client for `epochs` epochs (dynamic bound — no recompiles
+    when FedProx derives epochs from orbital timing). Returns params."""
+    apply_fn = MODELS[model][1]
+    gp = global_params if mu_on else None
+    epochs = jnp.asarray(epochs, jnp.int32)
+
+    def epoch_body(i, carry):
+        p, k = carry
+        k, sub = jax.random.split(k)
+        p = _one_epoch(apply_fn, p, x, y, lr, mu if mu_on else 0.0, gp,
+                       batch_size, sub)
+        return (p, k)
+
+    params, _ = jax.lax.fori_loop(0, epochs, epoch_body, (params, key))
+    return params
+
+
+def local_sgd_clients(model, stacked_params, xs, ys, keys, epochs, batch_size,
+                      lr, mu=0.0, global_params=None):
+    """vmap local_sgd across a stacked batch of clients (K, ...).
+
+    ``epochs`` may be scalar or per-client (K,) — vmapped either way."""
+    mu_on = mu > 0.0
+    ep = jnp.broadcast_to(jnp.asarray(epochs, jnp.int32),
+                          (jax.tree_util.tree_leaves(xs)[0].shape[0],))
+    fn = lambda p, x, y, k, e: local_sgd(model, p, x, y, k, e, batch_size,
+                                         lr, mu, mu_on, global_params)
+    return jax.vmap(fn)(stacked_params, xs, ys, keys, ep)

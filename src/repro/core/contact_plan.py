@@ -1,0 +1,115 @@
+"""ContactPlan: precomputed deterministic access windows (the paper's core
+observation — satellite orbits are deterministic, so client selection can be
+*scheduled* rather than sampled).
+
+Wraps per-satellite (t_start, t_end, gs) ground-station windows plus
+cluster-pair inter-plane link windows, with fast next-contact queries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.groundstations import gs_ecef
+from repro.orbit.visibility import (
+    access_windows,
+    interplane_los_series,
+    windows_from_bool,
+)
+
+
+@dataclasses.dataclass
+class ContactPlan:
+    constellation: WalkerStar
+    horizon_s: float
+    sat_windows: List[List[Tuple[float, float, int]]]   # per sat, sorted
+    cluster_of: np.ndarray                              # (K,)
+    pair_windows: Dict[Tuple[int, int], List[Tuple[float, float]]]
+    min_isl_sats: int = 10     # paper: >=10 sats/cluster for Intra-SL @500km
+
+    # ------------------------------------------------------------------
+    def next_contact(self, k: int, t: float
+                     ) -> Optional[Tuple[float, float, int]]:
+        """First window of sat k with any GS whose END is after t (a pass in
+        progress still counts; transmission starts at max(t, start))."""
+        for (s, e, g) in self.sat_windows[k]:
+            if e > t:
+                return (max(s, t), e, g)
+        return None
+
+    def intra_sl_enabled(self) -> bool:
+        return self.constellation.sats_per_cluster >= self.min_isl_sats
+
+    def peers(self, k: int) -> Sequence[int]:
+        c = int(self.cluster_of[k])
+        spc = self.constellation.sats_per_cluster
+        return range(c * spc, (c + 1) * spc)
+
+    def next_cluster_contact(self, k: int, t: float):
+        """Earliest GS contact among k's cluster peers (Intra-SL relay).
+        Returns (t_avail, end, gs, relay_sat). Priority to k itself on ties
+        (paper §3.2 consideration 3)."""
+        if not self.intra_sl_enabled():
+            w = self.next_contact(k, t)
+            return None if w is None else (*w, k)
+        best = None
+        for p in self.peers(k):
+            w = self.next_contact(p, t)
+            if w is None:
+                continue
+            key = (w[0], 0 if p == k else 1)
+            if best is None or key < (best[0], 0 if best[3] == k else 1):
+                best = (*w, p)
+        return best
+
+    def next_pair_window(self, ci: int, cj: int, t: float,
+                         min_duration: float = 0.0):
+        key = (min(ci, cj), max(ci, cj))
+        for (s, e) in self.pair_windows.get(key, []):
+            if e > t and (e - max(s, t)) >= min_duration:
+                return (max(s, t), e)
+        return None
+
+    def transmit_over_pair(self, ci: int, cj: int, t: float,
+                           tx_seconds: float) -> Optional[float]:
+        """Completion time of a transmission of ``tx_seconds`` airtime between
+        clusters ci and cj starting no earlier than t, resuming across
+        successive LOS windows (paper App. C.6: inter-plane windows are short;
+        transfers span multiple passes at low data rates)."""
+        key = (min(ci, cj), max(ci, cj))
+        remaining = tx_seconds
+        for (s, e) in self.pair_windows.get(key, []):
+            if e <= t:
+                continue
+            start = max(s, t)
+            avail = e - start
+            if avail >= remaining:
+                return start + remaining
+            remaining -= avail
+        return None
+
+
+def build_contact_plan(n_clusters: int, sats_per_cluster: int,
+                       n_ground_stations: int, horizon_s: float,
+                       dt_s: float = 30.0, min_elev_deg: float = 10.0,
+                       with_isl_pairs: bool = False) -> ContactPlan:
+    c = WalkerStar(n_clusters, sats_per_cluster)
+    raan, phase, cluster = satellite_elements(c)
+    times = np.arange(0.0, horizon_s, dt_s)
+    gs = gs_ecef(n_ground_stations)
+    incl = np.radians(c.inclination_deg)
+    wins = access_windows(c, raan, phase, incl, times, gs, min_elev_deg)
+    pair_windows = {}
+    if with_isl_pairs and n_clusters > 1:
+        for ci in range(n_clusters):
+            for cj in range(ci + 1, n_clusters):
+                a = ci * sats_per_cluster
+                b = cj * sats_per_cluster
+                los = interplane_los_series(c, raan, phase, incl, times, a, b)
+                pair_windows[(ci, cj)] = windows_from_bool(los, times)
+    return ContactPlan(constellation=c, horizon_s=horizon_s,
+                       sat_windows=wins, cluster_of=cluster,
+                       pair_windows=pair_windows)

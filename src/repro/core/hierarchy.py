@@ -1,0 +1,153 @@
+"""AutoFLSat's two-tier aggregation as a TPU-native training mode.
+
+Mapping (DESIGN.md §2): orbital cluster == pod. Each pod holds its own model
+replica — params carry a leading ``clusters`` axis sharded over the ``pod``
+mesh axis, so per-chip memory equals the replicated baseline. Training:
+
+  * tier 1 (Intra-SL, synchronous FL inside a cluster): every local step
+    all-reduces gradients over ``data``/``model`` ONLY — the vmap over the
+    cluster axis keeps pods independent (zero cross-pod traffic);
+  * tier 2 (Inter-SL, AutoFLSat round): every H steps ``cluster_sync``
+    averages parameters (and optimizer moments) across the cluster axis —
+    one all-reduce over the slow ``pod`` axis per H steps instead of a
+    gradient all-reduce every step;
+  * H comes from the orbital InterSLScheduler in faithful mode
+    (``sync_interval_from_orbits``) or is a fixed hyper-parameter;
+  * QuAFL (paper App. C): the exchanged parameters can be quantized to
+    ``quant_bits`` before averaging (kernels/quant_agg fuses this on TPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import AdamWConfig
+from repro.train.steps import TrainState, init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# state construction
+# ---------------------------------------------------------------------------
+
+
+def init_hfl_state(key, cfg, n_clusters: int) -> TrainState:
+    """Per-cluster replicated state with a leading clusters axis."""
+    # same init in every cluster (paper: w_0 seeded from one ground contact)
+    state = init_train_state(key, cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_clusters,) + x.shape), state)
+
+
+def abstract_hfl_state(cfg, n_clusters: int):
+    return jax.eval_shape(
+        lambda k: init_hfl_state(k, cfg, n_clusters), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+
+def make_hfl_local_step(cfg, opt_cfg: AdamWConfig = AdamWConfig()):
+    """One tier-1 step: every cluster trains on ITS OWN batch shard.
+
+    state leaves: (C, ...); batch leaves: (C, local_batch, ...).
+    No communication crosses the cluster (pod) axis.
+    """
+    step = make_train_step(cfg, opt_cfg)
+    return jax.vmap(step)
+
+
+def _mean_over_clusters(x):
+    m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+    return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+
+
+def _quantized_mean_over_clusters(x, bits: int):
+    """QuAFL: per-cluster symmetric uniform quantization before averaging."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)),
+                     axis=tuple(range(1, x.ndim)), keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    deq = q * scale
+    m = jnp.mean(deq, axis=0, keepdims=True)
+    return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+
+
+def make_cluster_sync(cfg, quant_bits: int = 0, sync_opt_state: bool = True):
+    """Tier-2 AutoFLSat exchange: average states across the cluster axis.
+
+    The only collective this step emits is over the ``pod`` mesh axis.
+    """
+    def sync(state: TrainState) -> TrainState:
+        if quant_bits:
+            avg_p = partial(_quantized_mean_over_clusters, bits=quant_bits)
+        else:
+            avg_p = _mean_over_clusters
+        params = jax.tree.map(avg_p, state.params)
+        opt = state.opt
+        if sync_opt_state:
+            opt = {"m": jax.tree.map(_mean_over_clusters, opt["m"]),
+                   "v": jax.tree.map(_mean_over_clusters, opt["v"]),
+                   "step": opt["step"]}
+        return TrainState(params=params, opt=opt)
+    return sync
+
+
+# ---------------------------------------------------------------------------
+# schedule from orbits (faithful mode)
+# ---------------------------------------------------------------------------
+
+
+def sync_interval_from_orbits(plan, hw, model_bytes: float,
+                              step_time_s: float, t: float = 0.0,
+                              max_h: int = 500) -> int:
+    """Derive H (steps between cluster syncs) from the InterSLScheduler:
+    chain the C(C-1)/2 pairwise ISL passes and convert the exchange-period
+    wall time into training steps (Algorithm 2's epoch budget, recast)."""
+    C = plan.constellation.n_clusters
+    if C <= 1:
+        return 1
+    tx = hw.tx_time(model_bytes, "isl") * 2.0
+    t_cur = t
+    for ci in range(C):
+        for cj in range(ci + 1, C):
+            done = plan.transmit_over_pair(ci, cj, t_cur, tx)
+            if done is None:
+                return max_h
+            t_cur = done
+    h = int((t_cur - t) // max(step_time_s, 1e-9))
+    return int(min(max(h, 1), max_h))
+
+
+# ---------------------------------------------------------------------------
+# sharding specs for the HFL mode
+# ---------------------------------------------------------------------------
+
+
+def hfl_state_specs(cfg, mesh, expert_parallel=False):
+    """Param/opt specs with the leading clusters axis mapped to ``pod``."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.partition import train_state_specs
+    base = train_state_specs(cfg, mesh, expert_parallel)
+
+    def lift(spec):
+        if not isinstance(spec, P):
+            return spec
+        return P(*(("pod",) + tuple(spec)))
+
+    return jax.tree.map(lift, base, is_leaf=lambda x: isinstance(x, P))
+
+
+def hfl_batch_specs(cfg, mesh, batch_tree):
+    """Batch (C, local_b, ...) with C over ``pod`` and local_b over ``data``."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec(leaf):
+        return P(*(("pod", "data") + (None,) * (leaf.ndim - 2)))
+
+    return jax.tree.map(spec, batch_tree)

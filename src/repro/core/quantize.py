@@ -1,0 +1,51 @@
+"""QuAFL-style uniform quantization of model parameters for transmission
+(paper App. C.5, Table 3: 8/10-bit communication vs 32-bit full precision).
+
+Per-tensor symmetric uniform quantization: q = round(x / scale), scale =
+max|x| / (2^(bits-1) - 1). Ints are carried in int32 (the wire-format byte
+count is reported separately — ``quantized_bytes`` bills ``bits`` per value,
+which is what the data-rate model charges the radio link)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _q_leaf(x, bits):
+    qmax = 2.0 ** (bits - 1) - 1.0
+    scale = jnp.maximum(jnp.max(jnp.abs(x)).astype(jnp.float32), 1e-12) / qmax
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+def quantize_pytree(params, bits: int):
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    qs, scales = [], []
+    for leaf in leaves:
+        q, s = _q_leaf(leaf, bits)
+        qs.append(q)
+        scales.append(s)
+    return (jax.tree_util.tree_unflatten(treedef, qs),
+            jax.tree_util.tree_unflatten(treedef, scales))
+
+
+def dequantize_pytree(q, scales, dtype=jnp.float32):
+    return jax.tree.map(lambda qi, s: (qi.astype(jnp.float32) * s).astype(dtype),
+                        q, scales)
+
+
+def quantized_bytes(params, bits: int) -> float:
+    n = sum(p.size for p in jax.tree_util.tree_leaves(params))
+    n_tensors = len(jax.tree_util.tree_leaves(params))
+    return n * bits / 8 + n_tensors * 4          # + one f32 scale per tensor
+
+
+def roundtrip_error(params, bits: int) -> float:
+    q, s = quantize_pytree(params, bits)
+    deq = dequantize_pytree(q, s)
+    num = sum(float(jnp.sum((a - b) ** 2)) for a, b in
+              zip(jax.tree_util.tree_leaves(params),
+                  jax.tree_util.tree_leaves(deq)))
+    den = sum(float(jnp.sum(a ** 2))
+              for a in jax.tree_util.tree_leaves(params))
+    return (num / max(den, 1e-12)) ** 0.5

@@ -1,0 +1,355 @@
+"""The space-ification framework (paper §3.1) + augmentations (§3.2).
+
+Space-ification of an FL algorithm = three modular revisions:
+  1. client selection: first C idle clients to contact a ground station
+     (communication windows are too scarce to sample randomly);
+  2. round completion: wait until every selected client re-contacts a GS to
+     return weights (no always-on links);
+  3. evaluation clients re-selected with the same contact protocol.
+
+Augmentations (applicable to any space-ified algorithm):
+  * ``scheduled`` — FLSchedule (Alg. 5): deterministic orbits => prioritize
+    clients with the smallest initial-contact + revisit total;
+  * ``intra_sl`` — FLIntraSL (Alg. 6): weights may return via any same-plane
+    peer that reaches a ground station first.
+
+Algorithms: FedAvgSat (Alg. 1), FedProxSat (Alg. 3, partial updates +
+proximal term, V2 adds a min-epoch floor), FedBuffSat (Alg. 4, async
+buffered aggregation with staleness discounting).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import pytree_bytes, weighted_average
+from repro.core.client import local_sgd, local_sgd_clients
+from repro.core.contact_plan import ContactPlan
+from repro.core.quantize import quantized_bytes
+from repro.models.small import MODELS, accuracy
+from repro.sim.hardware import HardwareProfile
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    t_start: float
+    t_end: float
+    duration_s: float
+    idle_s: float              # mean satellite idle time in the round
+    comm_s: float              # mean communication time
+    train_s: float             # mean on-board compute time
+    accuracy: float
+    participants: List[int]
+    epochs: float = 0.0
+
+
+@dataclasses.dataclass
+class FLConfig:
+    model: str = "cnn"
+    clients_per_round: int = 10          # C
+    epochs: int = 2                      # E (FedAvg; cap for FedProx)
+    batch_size: int = 32
+    lr: float = 0.05
+    prox_mu: float = 0.01
+    min_epochs: int = 0                  # FedProxSchV2 floor
+    max_local_epochs: int = 30           # cap: "excessive epochs damage
+                                         # convergence" (paper §6) + CPU cost
+    buffer_size: int = 5                 # FedBuff D
+    staleness_exponent: float = 0.5
+    selection: str = "first_contact"     # | "scheduled" | "intra_sl"
+    quant_bits: int = 0                  # 0 => f32 transmission
+    max_rounds: int = 500
+    seed: int = 0
+    eval_every: int = 1
+
+
+def _model_tx_bytes(params, cfg: FLConfig) -> float:
+    if cfg.quant_bits:
+        return quantized_bytes(params, cfg.quant_bits)
+    return pytree_bytes(params, 32)
+
+
+class SpaceifiedFL:
+    """Shared machinery for the orbital suite."""
+
+    name = "base"
+
+    def __init__(self, plan: ContactPlan, hw: HardwareProfile, dataset,
+                 cfg: FLConfig):
+        self.plan, self.hw, self.ds, self.cfg = plan, hw, dataset, cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        self.key, init_key = jax.random.split(key)
+        init_fn, self.apply_fn = MODELS[cfg.model]
+        img_shape = tuple(dataset.x.shape[2:])
+        self.global_params = init_fn(init_key, img_shape, dataset.n_classes)
+        self.tx_bytes = _model_tx_bytes(self.global_params, cfg)
+        self.records: List[RoundRecord] = []
+
+    # -- timing helpers -------------------------------------------------
+    def _t_up(self):
+        return self.hw.tx_time(self.tx_bytes, "uplink")
+
+    def _t_down(self):
+        return self.hw.tx_time(self.tx_bytes, "downlink")
+
+    # -- client selection (space-ification consideration 1 + augments) --
+    def _projected_return(self, k: int, t: float, epochs: float):
+        """(recv_end, train_end, ret_contact, relay) under current policy."""
+        w = self.plan.next_contact(k, t)
+        if w is None:
+            return None
+        recv_end = w[0] + self._t_up()
+        train_end = recv_end + self.hw.train_time(epochs)
+        if self.cfg.selection == "intra_sl":
+            ret = self.plan.next_cluster_contact(k, train_end)
+            if ret is None:
+                return None
+            return (w, recv_end, train_end, (ret[0], ret[1], ret[2]), ret[3])
+        ret = self.plan.next_contact(k, train_end)
+        if ret is None:
+            return None
+        return (w, recv_end, train_end, ret, k)
+
+    def select_clients(self, t: float) -> List[int]:
+        cfg, plan = self.cfg, self.plan
+        K = plan.constellation.n_sats
+        cands = []
+        for k in range(K):
+            proj = self._projected_return(k, t, cfg.epochs)
+            if proj is None:
+                continue
+            w, recv_end, train_end, ret, relay = proj
+            if cfg.selection == "first_contact":
+                score = w[0]                       # first to make contact
+            else:                                  # scheduled / intra_sl
+                score = ret[0] + self._t_down()    # fastest contact+return
+            cands.append((score, k))
+        cands.sort()
+        m = min(cfg.clients_per_round, len(cands))
+        return [k for _, k in cands[:m]]
+
+    # -- evaluation ------------------------------------------------------
+    def evaluate(self) -> float:
+        return accuracy(self.apply_fn, self.global_params,
+                        self.ds.x_test, self.ds.y_test)
+
+    # -- main loop -------------------------------------------------------
+    def run(self, t0: float = 0.0, t_end: Optional[float] = None,
+            max_rounds: Optional[int] = None):
+        t_end = t_end if t_end is not None else self.plan.horizon_s
+        max_rounds = max_rounds or self.cfg.max_rounds
+        t = t0
+        r = 0
+        while r < max_rounds and t < t_end:
+            rec = self.run_round(r, t)
+            if rec is None:
+                break
+            self.records.append(rec)
+            t = rec.t_end
+            r += 1
+        return self.records
+
+    def run_round(self, r: int, t: float) -> Optional[RoundRecord]:
+        raise NotImplementedError
+
+
+class FedAvgSat(SpaceifiedFL):
+    """Algorithm 1 (+ FLSchedule / FLIntraSL via cfg.selection)."""
+
+    name = "fedavg"
+
+    def run_round(self, r, t):
+        cfg = self.cfg
+        sel = self.select_clients(t)
+        if not sel:
+            return None
+        projs = {k: self._projected_return(k, t, cfg.epochs) for k in sel}
+        # train selected clients (vmapped, same epoch count: synchronous)
+        self.key, *keys = jax.random.split(self.key, len(sel) + 1)
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (len(sel),) + p.shape),
+            self.global_params)
+        xs, ys = self.ds.x[jnp.array(sel)], self.ds.y[jnp.array(sel)]
+        trained = local_sgd_clients(cfg.model, stacked, xs, ys,
+                                    jnp.stack(keys), cfg.epochs,
+                                    cfg.batch_size, cfg.lr)
+        n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
+        self.global_params = weighted_average(trained, n_k)
+
+        ends, idles, comms, trains = [], [], [], []
+        for k in sel:
+            w, recv_end, train_end, ret, relay = projs[k]
+            up_end = ret[0] + self._t_down()
+            ends.append(up_end)
+            idles.append((w[0] - t) + (ret[0] - train_end))
+            comms.append(self._t_up() + self._t_down())
+            trains.append(train_end - recv_end)
+        t_round_end = max(ends)
+        acc = self.evaluate() if r % cfg.eval_every == 0 else \
+            (self.records[-1].accuracy if self.records else 0.0)
+        return RoundRecord(r, t, t_round_end, t_round_end - t,
+                           float(np.mean(idles)), float(np.mean(comms)),
+                           float(np.mean(trains)), acc, sel,
+                           epochs=cfg.epochs)
+
+
+class FedProxSat(SpaceifiedFL):
+    """Algorithm 3: partial updates — each client trains until it reaches a
+    ground station; a proximal term bounds local drift. V2 (min_epochs>0)
+    enforces a minimum-epoch floor before returning (paper §5.1.1)."""
+
+    name = "fedprox"
+
+    def run_round(self, r, t):
+        cfg = self.cfg
+        sel = self.select_clients(t)
+        if not sel:
+            return None
+        self.key, *keys = jax.random.split(self.key, len(sel) + 1)
+        ends, idles, comms, trains, epoch_list = [], [], [], [], []
+        plans = []
+        for k in sel:
+            w = self.plan.next_contact(k, t)
+            recv_end = w[0] + self._t_up()
+            floor_end = recv_end + self.hw.train_time(max(cfg.min_epochs, 1))
+            if cfg.selection == "intra_sl":
+                ret = self.plan.next_cluster_contact(k, floor_end)
+                ret = (ret[0], ret[1], ret[2]) if ret else None
+            else:
+                ret = self.plan.next_contact(k, floor_end)
+            if ret is None:
+                return None
+            epochs = int((ret[0] - recv_end) // self.hw.epoch_time_s)
+            epochs = int(np.clip(epochs, max(cfg.min_epochs, 1),
+                                 cfg.max_local_epochs))
+            train_end = recv_end + self.hw.train_time(epochs)
+            plans.append((k, epochs))
+            up_end = ret[0] + self._t_down()
+            ends.append(up_end)
+            idles.append((w[0] - t) + max(ret[0] - train_end, 0.0))
+            comms.append(self._t_up() + self._t_down())
+            trains.append(train_end - recv_end)
+            epoch_list.append(epochs)
+        xs, ys = self.ds.x[jnp.array(sel)], self.ds.y[jnp.array(sel)]
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (len(sel),) + p.shape),
+            self.global_params)
+        trained = local_sgd_clients(
+            cfg.model, stacked, xs, ys, jnp.stack(keys),
+            jnp.asarray(epoch_list, jnp.int32), cfg.batch_size, cfg.lr,
+            mu=cfg.prox_mu, global_params=self.global_params)
+        n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
+        self.global_params = weighted_average(trained, n_k)
+        t_round_end = max(ends)
+        acc = self.evaluate() if r % cfg.eval_every == 0 else \
+            (self.records[-1].accuracy if self.records else 0.0)
+        return RoundRecord(r, t, t_round_end, t_round_end - t,
+                           float(np.mean(idles)), float(np.mean(comms)),
+                           float(np.mean(trains)), acc, sel,
+                           epochs=float(np.mean(epoch_list)))
+
+
+class FedBuffSat(SpaceifiedFL):
+    """Algorithm 4: asynchronous buffered aggregation. Clients train
+    continuously between ground contacts (near-zero idle, paper Fig. 5c);
+    the server folds in updates with staleness discounting and completes a
+    "round" when the buffer reaches D updates."""
+
+    name = "fedbuff"
+
+    def run(self, t0: float = 0.0, t_end: Optional[float] = None,
+            max_rounds: Optional[int] = None):
+        cfg, plan, hw = self.cfg, self.plan, self.hw
+        t_end = t_end if t_end is not None else plan.horizon_s
+        max_rounds = max_rounds or cfg.max_rounds
+        K = plan.constellation.n_sats
+
+        # client states: params version picked up, pickup round, pickup time
+        heap = []
+        client_params: Dict[int, object] = {}
+        pickup_round: Dict[int, int] = {}
+        epochs_of: Dict[int, int] = {}
+        for k in range(K):
+            w = plan.next_contact(k, t0)
+            if w is None:
+                continue
+            recv_end = w[0] + self._t_up()
+            ret = plan.next_contact(k, recv_end + hw.epoch_time_s)
+            if ret is None:
+                continue
+            ep = int(np.clip((ret[0] - recv_end) // hw.epoch_time_s, 1,
+                             cfg.max_local_epochs))
+            heapq.heappush(heap, (ret[0] + self._t_down(), k))
+            client_params[k] = self.global_params
+            pickup_round[k] = 0
+            epochs_of[k] = ep
+
+        buf, r = [], 0
+        t_round_start = t0
+        idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
+        while heap and r < max_rounds:
+            t_ret, k = heapq.heappop(heap)
+            if t_ret > t_end:
+                break
+            self.key, sub = jax.random.split(self.key)
+            trained = local_sgd(cfg.model, client_params[k], self.ds.x[k],
+                                self.ds.y[k], sub, epochs_of[k],
+                                cfg.batch_size, cfg.lr, cfg.prox_mu, True,
+                                client_params[k])
+            stale = r - pickup_round[k]
+            wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
+            delta = jax.tree.map(lambda a, b: (a - b) * wgt, trained,
+                                 client_params[k])
+            buf.append(delta)
+            comm_acc += self._t_up() + self._t_down()
+            train_acc += epochs_of[k] * hw.epoch_time_s
+            n_ev += 1
+            # client immediately picks up the current global and continues
+            recv_end = t_ret + self._t_up()
+            nxt = plan.next_contact(k, recv_end + hw.epoch_time_s)
+            if nxt is not None:
+                ep = int(np.clip((nxt[0] - recv_end) // hw.epoch_time_s, 1,
+                                 cfg.max_local_epochs))
+                heapq.heappush(heap, (nxt[0] + self._t_down(), k))
+                client_params[k] = self.global_params
+                pickup_round[k] = r
+                epochs_of[k] = ep
+
+            if len(buf) >= cfg.buffer_size:
+                mean_delta = jax.tree.map(
+                    lambda *ds: sum(ds) / len(ds), *buf)
+                self.global_params = jax.tree.map(
+                    lambda p, dlt: p + dlt, self.global_params, mean_delta)
+                buf = []
+                acc = self.evaluate() if r % cfg.eval_every == 0 else \
+                    (self.records[-1].accuracy if self.records else 0.0)
+                dur = t_ret - t_round_start
+                self.records.append(RoundRecord(
+                    r, t_round_start, t_ret, dur,
+                    max(dur - train_acc / max(n_ev, 1)
+                        - comm_acc / max(n_ev, 1), 0.0) * 0.05,
+                    comm_acc / max(n_ev, 1), train_acc / max(n_ev, 1),
+                    acc, [], epochs=float(np.mean(list(epochs_of.values())))))
+                t_round_start = t_ret
+                idle_acc = comm_acc = train_acc = 0.0
+                n_ev = 0
+                r += 1
+        return self.records
+
+
+ALGORITHMS = {
+    "fedavg": (FedAvgSat, {}),
+    "fedavg_sch": (FedAvgSat, {"selection": "scheduled"}),
+    "fedavg_intrasl": (FedAvgSat, {"selection": "intra_sl"}),
+    "fedprox": (FedProxSat, {}),
+    "fedprox_sch": (FedProxSat, {"selection": "scheduled"}),
+    "fedprox_schv2": (FedProxSat, {"selection": "scheduled", "min_epochs": 2}),
+    "fedprox_intrasl": (FedProxSat, {"selection": "intra_sl"}),
+    "fedbuff": (FedBuffSat, {}),
+}

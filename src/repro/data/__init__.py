@@ -1,0 +1,6 @@
+from repro.data.synthetic import DATASETS, make_federated_dataset
+from repro.data.partition import dirichlet_partition
+from repro.data.tokens import synthetic_lm_batches
+
+__all__ = ["DATASETS", "make_federated_dataset", "dirichlet_partition",
+           "synthetic_lm_batches"]

@@ -1,0 +1,34 @@
+"""Non-IID client partitioning (Dirichlet label skew)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dirichlet_labels(key, n_clients, n_per_client, n_classes, alpha):
+    """Sample per-client label arrays (K, N) with Dirichlet(alpha) skew."""
+    kp, ks = jax.random.split(key)
+    probs = jax.random.dirichlet(kp, jnp.full((n_classes,), alpha),
+                                 (n_clients,))                 # (K, C)
+    keys = jax.random.split(ks, n_clients)
+    sample = jax.vmap(
+        lambda k, p: jax.random.choice(k, n_classes, (n_per_client,), p=p))
+    return sample(keys, probs).astype(jnp.int32)
+
+
+def dirichlet_partition(key, labels, n_clients, alpha):
+    """Partition an existing label array into client index lists (ragged ->
+    truncated to the min client size for static shapes)."""
+    n_classes = int(labels.max()) + 1
+    probs = jax.random.dirichlet(key, jnp.full((n_classes,), alpha),
+                                 (n_clients,))
+    # greedy assignment: each sample goes to a client weighted by its class
+    keys = jax.random.split(key, labels.shape[0])
+    cls_probs = probs[:, labels].T                             # (N, K)
+    cls_probs = cls_probs / cls_probs.sum(-1, keepdims=True)
+    assign = jax.vmap(lambda k, p: jax.random.choice(k, n_clients, (), p=p))(
+        keys, cls_probs)
+    idx = [jnp.where(assign == c)[0] for c in range(n_clients)]
+    m = min(int(i.shape[0]) for i in idx)
+    m = max(m, 1)
+    return jnp.stack([i[:m] for i in idx])

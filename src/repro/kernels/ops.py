@@ -1,0 +1,121 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on real TPU
+(``default_interpret()``); every op has a pure-jnp oracle in ref.py and the
+tests sweep shapes/dtypes asserting allclose.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.quant_agg import quant_agg
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+from repro.kernels.swa_attention import swa_attention
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# 1) fused QuAFL dequantize + weighted in-place accumulate
+# ---------------------------------------------------------------------------
+
+
+def quantized_weighted_accumulate(acc, q, scale, weight, interpret=None):
+    """acc += weight * scale * q, tiled through VMEM. Any shape."""
+    interpret = default_interpret() if interpret is None else interpret
+    return quant_agg(acc, q, scale, weight, interpret=interpret)
+
+
+def quantized_inplace_aggregate(q_models, scales, weights, interpret=None):
+    """Aggregate a stream of quantized pytrees into one f32 pytree using the
+    fused kernel per leaf (paper Fig. 7 in-place semantics, QuAFL wire
+    format). q_models: list of pytrees of int32; scales: list of pytrees of
+    scalars; weights: list of floats (normalized here)."""
+    tot = sum(weights)
+    acc = jax.tree.map(lambda q: jnp.zeros(q.shape, jnp.float32), q_models[0])
+    for qm, sc, w in zip(q_models, scales, weights):
+        acc = jax.tree.map(
+            lambda a, qq, ss: quantized_weighted_accumulate(
+                a, qq, ss, w / tot, interpret=interpret), acc, qm, sc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# 2) Mamba-2 SSD chunked scan (intra-chunk kernel + jnp inter-chunk glue)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked_kernel(x, dt, A, B, C, chunk, init_state=None,
+                       interpret=None):
+    """Same contract as repro.models.ssm.ssd_chunked, but the quadratic
+    intra-chunk stage runs in the Pallas kernel.
+
+    x (b,l,h,p); dt (b,l,h) post-softplus; A (h,); B, C (b,l,g,n).
+    Returns (y (b,l,h,p) f32, final_state (b,h,p,n)).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0
+    nc = l // chunk
+    rep = h // g
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Br = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3).astype(
+        jnp.float32)
+    Cr = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3).astype(
+        jnp.float32)
+
+    y_diag, states = ssd_chunk_pallas(xr, dtr, A.astype(jnp.float32), Br, Cr,
+                                      interpret=interpret)
+
+    # inter-chunk recurrence + carried-state output term (linear, jnp)
+    dA = dtr * A                                       # (b,nc,c,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])          # (b,nc,h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp
+        return carry * dec[..., None, None] + st, carry
+
+    st_seq = jnp.moveaxis(states, 1, 0)
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)
+    final_state, prev = jax.lax.scan(step, init_state, (st_seq, dec_seq))
+    prev = jnp.moveaxis(prev, 0, 1)                    # (b,nc,h,p,n)
+    state_decay = jnp.exp(dA_cs)                       # (b,nc,c,h)
+    y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp", Cr, prev, state_decay)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+# ---------------------------------------------------------------------------
+# 3) sliding-window flash attention
+# ---------------------------------------------------------------------------
+
+
+def swa_flash_attention(q, k, v, window=0, causal=True, bq=128, bk=128,
+                        interpret=None):
+    """q (B,L,H,hd); k,v (B,L,K,hd) GQA. Returns (B,L,H,hd)."""
+    interpret = default_interpret() if interpret is None else interpret
+    b, l, h, hd = q.shape
+    kh = k.shape[2]
+    rep = h // kh
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+    kf = kr.transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+    vf = vr.transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+    of = swa_attention(qf, kf, vf, window=window, causal=causal,
+                       bq=min(bq, l), bk=min(bk, l), interpret=interpret)
+    return of.reshape(b, h, l, hd).transpose(0, 2, 1, 3)
+
+
+__all__ = ["quantized_weighted_accumulate", "quantized_inplace_aggregate",
+           "ssd_chunked_kernel", "swa_flash_attention", "default_interpret",
+           "ref"]

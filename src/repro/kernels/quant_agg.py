@@ -1,0 +1,63 @@
+"""Fused QuAFL dequantize + weighted in-place accumulate (Pallas TPU).
+
+The paper's FLyCubes aggregate quantized peer models in fixed memory
+(App. C.3 in-place aggregation + C.5 QuAFL quantization). At pod scale the
+same fusion matters: the cross-cluster sync dequantizes each incoming
+cluster's int-quantized parameters and accumulates into one f32 buffer
+without materializing a dequantized copy of every model.
+
+acc_new = acc + weight * scale * q            (one VMEM pass per tile)
+
+Tiling: tensors are flattened and padded to (n_tiles, 8, TILE_LANES); each
+grid step owns one (8, 256) f32 tile in VMEM (8 sublanes x 256 lanes, a
+multiple of the fp32 (8, 128) native tile).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_SUB = 8
+TILE_LANES = 256
+TILE = TILE_SUB * TILE_LANES
+
+
+def _qagg_kernel(acc_ref, q_ref, sw_ref, out_ref):
+    w_scale = sw_ref[0, 0] * sw_ref[0, 1]          # weight * scale
+    out_ref[...] = acc_ref[...] + w_scale * q_ref[...].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_agg_tiles(acc, q, scale, weight, interpret=True):
+    """acc (T, 8, L) f32; q (T, 8, L) int32; scale, weight scalars."""
+    t = acc.shape[0]
+    sw = jnp.stack([jnp.asarray(weight, jnp.float32),
+                    jnp.asarray(scale, jnp.float32)]).reshape(1, 2)
+    return pl.pallas_call(
+        _qagg_kernel,
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_SUB, TILE_LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, TILE_SUB, TILE_LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_SUB, TILE_LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, jnp.float32),
+        interpret=interpret,
+    )(acc, q, sw)
+
+
+def quant_agg(acc, q, scale, weight, interpret=True):
+    """Flat or any-shape acc/q; returns acc + weight*scale*q (f32)."""
+    shape = acc.shape
+    flat = acc.reshape(-1).astype(jnp.float32)
+    qf = q.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % TILE
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, TILE_SUB, TILE_LANES)
+    qf = jnp.pad(qf, (0, pad)).reshape(-1, TILE_SUB, TILE_LANES)
+    out = quant_agg_tiles(flat, qf, scale, weight, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_agg_ref(acc, q, scale, weight):
+    """acc + weight * dequantize(q): all f32. acc/q (N,); scale, weight scalars."""
+    return acc + weight * scale * q.astype(jnp.float32)
+
+
+def ssd_chunk_ref(x, dt, A, B, C):
+    """Intra-chunk SSD reference.
+
+    x (b, nc, c, h, p); dt (b, nc, c, h); A (h,); B, C (b, nc, c, h, n)
+    (already head-broadcast). Returns (y_diag (b,nc,c,h,p),
+    states (b,nc,h,p,n) — the chunk's contribution to the carried state).
+    """
+    dA = dt * A                                      # (b,nc,c,h)
+    cs = jnp.cumsum(dA, axis=2)
+    seg = cs[..., :, None, :] - cs[..., None, :, :]  # (b,nc,c,c,h) [i,j]
+    cmask = jnp.tril(jnp.ones((dt.shape[2], dt.shape[2]), bool))
+    L = jnp.where(cmask[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bzihn,bzjhn->bzijh", C, B)
+    W = CB * L * dt[:, :, None, :, :]
+    y_diag = jnp.einsum("bzijh,bzjhp->bzihp", W, x)
+    decay = jnp.exp(cs[:, :, -1:, :] - cs)           # (b,nc,c,h)
+    states = jnp.einsum("bzchn,bzch,bzchp->bzhpn", B, dt * decay, x)
+    return y_diag, states
+
+
+def swa_attention_ref(q, k, v, window, causal=True):
+    """Sliding-window attention oracle.
+
+    q, k, v: (BH, L, D) — kv already head-repeated. window=0 => full causal.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(q.shape[1])[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones_like(s, bool)
+    if causal:
+        m = m & (kpos <= qpos)
+    if window:
+        m = m & (kpos > qpos - window)
+    s = jnp.where(m[None] if m.ndim == 2 else m, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)

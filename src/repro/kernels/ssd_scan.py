@@ -1,0 +1,91 @@
+"""Mamba-2 SSD intra-chunk kernel (Pallas TPU).
+
+The quadratic-in-chunk part of the SSD algorithm (arXiv:2405.21060 §6) is the
+compute hot-spot of every mamba layer (mamba2-1.3b, jamba): per (batch,
+chunk, head) it builds the causal decay matrix L, the C·Bᵀ Gram matrix, and
+contracts against x — all MXU matmuls once tiled. The inter-chunk recurrence
+(linear) and the carried-state output term stay in jnp (ops.py composes).
+
+Block layout per grid step (b, z=chunk, h):
+  x   (1, C, 1, P)  VMEM      y_diag (1, C, 1, P)
+  dt  (1, C, 1)                states (1, 1, 1, P, N)
+  B,C (1, C, 1, N)
+C (chunk) and P, N are 128-multiples friendly (defaults C=P=64/128, N=128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, st_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)    # (C, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # (C,)
+    a = a_ref[0]                                    # scalar (per head)
+    bm = b_ref[0, 0, :, 0, :].astype(jnp.float32)   # (C, N)
+    cm = c_ref[0, 0, :, 0, :].astype(jnp.float32)   # (C, N)
+
+    da = dt * a                                     # (C,)
+    cs = jnp.cumsum(da)
+    seg = cs[:, None] - cs[None, :]                 # sum_{j+1..i}
+    c_len = dt.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (c_len, c_len), 1)
+    ell = jnp.where(rows >= cols, jnp.exp(seg), 0.0)
+
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)   # (C, C)
+    w = cb * ell * dt[None, :]
+    y_ref[0, 0, :, 0, :] = jnp.dot(w, x, preferred_element_type=jnp.float32)
+
+    decay = jnp.exp(cs[-1] - cs)                    # (C,)
+    st = jnp.dot(x.T, bm * (dt * decay)[:, None],
+                 preferred_element_type=jnp.float32)             # (P, N)
+    st_ref[0, 0, 0, :, :] = st
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(x, dt, A, B, C, interpret=True):
+    """x (b, nc, c, h, p); dt (b, nc, c, h); A (h,); B, C (b, nc, c, h, n).
+
+    Returns (y_diag (b,nc,c,h,p), states (b,nc,h,p,n)).
+    """
+    b, nc, c, h, p = x.shape
+    n = B.shape[-1]
+    grid = (b, nc, h)
+    y, st = pl.pallas_call(
+        _ssd_chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, 1, p),
+                         lambda bi, zi, hi: (bi, zi, 0, hi, 0)),
+            pl.BlockSpec((1, 1, c, 1), lambda bi, zi, hi: (bi, zi, 0, hi)),
+            pl.BlockSpec((1,), lambda bi, zi, hi: (hi,)),
+            pl.BlockSpec((1, 1, c, 1, n),
+                         lambda bi, zi, hi: (bi, zi, 0, hi, 0)),
+            pl.BlockSpec((1, 1, c, 1, n),
+                         lambda bi, zi, hi: (bi, zi, 0, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, 1, p),
+                         lambda bi, zi, hi: (bi, zi, 0, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n),
+                         lambda bi, zi, hi: (bi, zi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, c, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        # reorder x/dt/B/C so the per-head slice is contiguous in the block
+        x.transpose(0, 1, 2, 3, 4),
+        dt,
+        A.astype(jnp.float32),
+        B,
+        C,
+    )
+    return y, st

@@ -1,0 +1,105 @@
+"""Sliding-window flash attention forward (Pallas TPU).
+
+Used by mixtral-8x22b prefill and the SWA-retrofit long-context decode path.
+Online-softmax over kv blocks with VMEM scratch accumulators; fully-masked
+kv blocks (outside the causal/sliding window band) are skipped with pl.when
+so compute scales with the window, not the sequence.
+
+Grid (BH, n_q_blocks, n_kv_blocks), kv innermost ("arbitrary" semantics);
+blocks: q/out (1, BQ, D), k/v (1, BK, D); scratch acc (BQ, D) f32, m/l (BQ, 128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_fwd_kernel(q_ref, k_ref, v_ref, o_ref,
+                    acc_ref, m_ref, l_ref,
+                    *, bq, bk, window, causal, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    # block-level skip: is any (q, k) pair in this block pair visible?
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window:
+        needed = jnp.logical_and(needed,
+                                 k_start + bk - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        s = s * (q.shape[-1] ** -0.5)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                             # (BQ, 1)
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur)
+        l_ref[:, :1] = l_ref[:, :1] * alpha + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_cur
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "causal", "bq", "bk",
+                                    "interpret"))
+def swa_attention(q, k, v, window=0, causal=True, bq=128, bk=128,
+                  interpret=True):
+    """q, k, v (BH, L, D) — kv head-repeated. Returns (BH, L, D)."""
+    bh, l, d = q.shape
+    bq = min(bq, l)
+    bk = min(bk, l)
+    assert l % bq == 0 and l % bk == 0, (l, bq, bk)
+    n_q, n_kv = l // bq, l // bk
+    kern = functools.partial(_swa_fwd_kernel, bq=bq, bk=bk, window=window,
+                             causal=causal, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+            pltpu.VMEM((bq, 128), jnp.float32),   # running max
+            pltpu.VMEM((bq, 128), jnp.float32),   # running denominator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config lowers + compiles for
+every (architecture x input shape x mesh) and extract roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+
+Writes one JSON per (arch, shape, mesh) with per-device FLOPs/bytes,
+collective bytes (from repro.launch.hlo_analysis), memory analysis, and
+model-FLOPs bookkeeping. ``--skip-existing`` makes the sweep resumable.
+"""  # noqa: E402
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.hlo_analysis import analyze_module  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.sharding import partition as PT  # noqa: E402
+from repro.train import steps as ST  # noqa: E402
+
+
+def should_skip(cfg, shape) -> str:
+    """Return a reason string if this (arch, shape) is skipped by design."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return ("full-attention architecture: 524k-token decode requires "
+                "sub-quadratic state (DESIGN.md §5)")
+    return ""
+
+
+def model_flops(cfg, shape) -> float:
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n_active * tokens)
+
+
+def build_hfl_steps_and_args(cfg, shape, mesh, quant_bits=0):
+    """The paper's hierarchical mode: per-pod local step + cluster sync.
+
+    Returns ((local_fn, local_args), (sync_fn, sync_args)). Multi-pod only:
+    state has a leading clusters axis sharded over `pod`; the local step must
+    emit NO pod-axis collectives, the sync step exactly one family of them.
+    """
+    from repro.core import hierarchy as H
+    n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+    assert n_pods > 1, "HFL dry-run needs the multi-pod mesh"
+    state_abs = H.abstract_hfl_state(cfg, n_pods)
+    state_specs = H.hfl_state_specs(cfg, mesh)
+    ins = S.input_specs(cfg, shape)
+    b = ins["batch"]["tokens"].shape[0]
+    hfl_batch = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_pods, s.shape[0] // n_pods)
+                                       + s.shape[1:], s.dtype), ins["batch"])
+    batch_specs = H.hfl_batch_specs(cfg, mesh, hfl_batch)
+    local = jax.jit(H.make_hfl_local_step(cfg),
+                    in_shardings=(PT.named(mesh, state_specs),
+                                  PT.named(mesh, batch_specs)),
+                    donate_argnums=0)
+    sync = jax.jit(H.make_cluster_sync(cfg, quant_bits=quant_bits),
+                   in_shardings=(PT.named(mesh, state_specs),),
+                   out_shardings=PT.named(mesh, state_specs),
+                   donate_argnums=0)
+    return (local, (state_abs, hfl_batch)), (sync, (state_abs,))
+
+
+def build_step_and_args(cfg, shape, mesh, expert_parallel=False):
+    """Returns (jitted fn, kwargs of ShapeDtypeStructs)."""
+    ins = S.input_specs(cfg, shape)
+    if shape.kind == "train":
+        step = ST.make_train_step(cfg)
+        state_abs = jax.eval_shape(
+            lambda k: ST.init_train_state(k, cfg), jax.random.PRNGKey(0))
+        state_specs = PT.train_state_specs(cfg, mesh, expert_parallel)
+        batch_sp = PT.batch_specs(cfg, mesh, ins["batch"])
+        fn = jax.jit(step,
+                     in_shardings=(PT.named(mesh, state_specs),
+                                   PT.named(mesh, batch_sp)),
+                     donate_argnums=0)
+        return fn, (state_abs, ins["batch"])
+    if shape.kind == "prefill":
+        step = ST.make_prefill_step(cfg)
+        params_abs = M.abstract_params(cfg)
+        psp = PT.param_specs(cfg, mesh, expert_parallel)
+        bsp = PT.batch_specs(cfg, mesh, ins["batch"])
+        fn = jax.jit(step, in_shardings=(PT.named(mesh, psp),
+                                         PT.named(mesh, bsp)))
+        return fn, (params_abs, ins["batch"])
+    # decode
+    step = ST.make_decode_step(cfg)
+    params_abs = M.abstract_params(cfg)
+    psp = PT.param_specs(cfg, mesh, expert_parallel)
+    dsp = PT.decode_arg_specs(cfg, mesh, ins)
+    fn = jax.jit(step,
+                 in_shardings=(PT.named(mesh, psp),
+                               PT.named(mesh, dsp["cache"]),
+                               PT.named(mesh, dsp["tokens"]),
+                               PT.named(mesh, dsp["pos"])),
+                 donate_argnums=1)
+    return fn, (params_abs, ins["cache"], ins["tokens"], ins["pos"])
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            expert_parallel=False, cfg=None, tag="", hfl=False,
+            quant_bits=0):
+    cfg = cfg or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "kind": shape.kind, "tag": tag, "hfl": bool(hfl),
+           "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+           "expert_parallel": bool(expert_parallel)}
+    reason = should_skip(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    try:
+        t0 = time.time()
+        if hfl:
+            (fn, args), (sync_fn, sync_args) = build_hfl_steps_and_args(
+                cfg, shape, mesh, quant_bits=quant_bits)
+            sync_ms = analyze_module(
+                sync_fn.lower(*sync_args).compile().as_text())
+            rec["sync_collective_bytes_per_dev"] = sync_ms.collective_bytes
+            rec["sync_link_bytes_per_dev"] = sync_ms.collective_link_bytes
+        else:
+            fn, args = build_step_and_args(cfg, shape, mesh, expert_parallel)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis()
+        ms = analyze_module(compiled.as_text())
+        rec.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "hlo_flops_per_dev": ms.flops,
+            "hlo_bytes_per_dev": ms.bytes,
+            "collective_bytes_per_dev": ms.collective_bytes,
+            "collective_link_bytes_per_dev": ms.collective_link_bytes,
+            "n_collectives": ms.n_collectives,
+            "xla_cost_flops_bodyonce": float(ca.get("flops", -1.0)),
+            "xla_cost_bytes_bodyonce": float(ca.get("bytes accessed", -1.0)),
+            "mem_argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "mem_output_bytes_per_dev": mem.output_size_in_bytes,
+            "mem_temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "mem_alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "model_flops_global": model_flops(cfg, shape),
+        })
+    except Exception as e:  # a failure here is a bug in the system
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "none"])
+    ap.add_argument("--attn-impl", default=None,
+                    choices=[None, "naive", "chunked", "flash"])
+    ap.add_argument("--swa-override", type=int, default=0,
+                    help="retrofit sliding-window attention (window N) onto "
+                         "full-attention archs so long_500k decode runs "
+                         "(rows marked swa-retrofit, DESIGN.md §5)")
+    ap.add_argument("--hfl", action="store_true",
+                    help="lower the hierarchical (AutoFLSat) local+sync "
+                         "steps instead of the plain train step (multi only)")
+    ap.add_argument("--quant-bits", type=int, default=0)
+    args = ap.parse_args()
+    if args.hfl:
+        args.mesh = "multi"
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                suffix = f"__{args.tag}" if args.tag else ""
+                f = outdir / f"{arch}__{shape}__{mk}{suffix}.json"
+                if args.skip_existing and f.exists():
+                    prev = json.loads(f.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[cached ] {f.name}", flush=True)
+                        continue
+                cfg = get_config(arch)
+                if args.remat:
+                    cfg = dataclasses.replace(cfg, remat=args.remat)
+                if args.attn_impl:
+                    cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
+                if args.swa_override and cfg.encoder is None \
+                        and not cfg.sliding_window \
+                        and cfg.arch_type not in ("ssm", "hybrid"):
+                    cfg = dataclasses.replace(
+                        cfg, sliding_window=args.swa_override)
+                rec = run_one(arch, shape, mk, args.expert_parallel, cfg=cfg,
+                              tag=args.tag, hfl=args.hfl,
+                              quant_bits=args.quant_bits)
+                f.write_text(json.dumps(rec, indent=1))
+                s = rec["status"]
+                n_ok += s == "ok"
+                n_skip += s == "skipped"
+                n_err += s == "error"
+                extra = ""
+                if s == "ok":
+                    extra = (f"compile={rec['compile_s']}s "
+                             f"flops/dev={rec['hlo_flops_per_dev']:.3e} "
+                             f"link B/dev={rec['collective_link_bytes_per_dev']:.3e}")
+                elif s == "error":
+                    extra = rec["error"][:120]
+                print(f"[{s:7s}] {arch} x {shape} x {mk} {extra}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}", flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

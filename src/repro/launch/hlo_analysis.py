@@ -1,0 +1,299 @@
+"""Static analyzer for compiled HLO text (the dry-run "profiler").
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes
+it useless for scan-over-layers graphs (validated in tests): an 80-layer model
+reports one layer of FLOPs. This module re-derives roofline inputs directly
+from ``compiled.as_text()``:
+
+  * per-computation symbol table (instruction -> dtype/shape),
+  * dot FLOPs (2 * result_elems * contraction_size) and elementwise FLOPs,
+  * approximate HBM bytes (result buffers of materializing opcodes),
+  * collective bytes per category, with ring-model link-byte estimates,
+  * roll-up through ``while`` ops using trip counts parsed from the loop
+    condition (max integer constant — validated against unrolled scans).
+
+All quantities are PER DEVICE (the SPMD-partitioned module is per-device).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# materializing opcodes counted toward HBM-byte traffic (result buffers).
+# broadcast/iota are always fused on TPU (no HBM traffic); dynamic-update-
+# slice is special-cased to bill only the written slice, not the buffer.
+_MATERIALIZE = ("fusion", "dot", "convolution", "copy", "dynamic-slice",
+                "transpose", "reduce", "sort",
+                "scatter", "gather", "concatenate",
+                "select-and-scatter", "custom-call", "bitcast-convert",
+                "reshape", "pad", "slice", "convert") + COLLECTIVE_OPS
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    dtype: str
+    shape: Tuple[int, ...]
+    tuple_bytes: int          # total bytes incl. tuple elements
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveStat:
+    kind: str
+    bytes_out: int
+    group_size: int
+    count: int = 1
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-device bytes crossing links (ring model)."""
+        n, b = self.group_size, self.bytes_out
+        if n <= 1:
+            return 0.0
+        if self.kind == "all-gather":
+            return b * (n - 1) / n            # out = gathered buffer
+        if self.kind == "all-reduce":
+            return 2.0 * b * (n - 1) / n
+        if self.kind == "reduce-scatter":
+            return b * (n - 1)                # out = shard
+        if self.kind == "all-to-all":
+            return b * (n - 1) / n
+        return float(b)                        # collective-permute
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: List[CollectiveStat] = dataclasses.field(default_factory=list)
+    whiles: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    calls: List[str] = dataclasses.field(default_factory=list)
+    max_const: int = 0
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+_IOTA_RG_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_BRACE_RG_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_shapes(typestr: str) -> Tuple[str, Tuple[int, ...], int]:
+    """First shape + total bytes over all shapes in a (possibly tuple) type."""
+    total = 0
+    first = None
+    for m in _SHAPE_RE.finditer(typestr):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(x) for x in dims.split(",") if x) if dims else ()
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        if first is None:
+            first = (dt, shape)
+    if first is None:
+        return "", (), 0
+    return first[0], first[1], total
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry_marker = "__entry__"
+    for line in text.splitlines():
+        header = re.match(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$",
+                          line)
+        if header:
+            cur = header.group(2)
+            comps[cur] = []
+            if header.group(1):
+                comps[entry_marker] = comps[cur]
+                comps["__entry_name__"] = [cur]  # type: ignore
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _dot_flops(line: str, symtab: Dict[str, Tuple[str, Tuple[int, ...]]],
+               result_shape: Tuple[int, ...]) -> float:
+    m = re.search(r"dot\(([^)]*)\)", line)
+    res_elems = 1
+    for d in result_shape:
+        res_elems *= d
+    contraction = 1
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    if m and cm:
+        operands = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+        lhs = symtab.get(operands[0])
+        if lhs:
+            for di in cm.group(1).split(","):
+                if di and int(di) < len(lhs[1]):
+                    contraction *= lhs[1][int(di)]
+    return 2.0 * res_elems * contraction
+
+
+def analyze_computation(lines: List[str]) -> Tuple[CompStats,
+                                                   Dict[str, Tuple[str, Tuple[int, ...]]]]:
+    st = CompStats()
+    symtab: Dict[str, Tuple[str, Tuple[int, ...]]] = {}
+    for line in lines:
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            for c in _CONST_RE.finditer(line):
+                st.max_const = max(st.max_const, int(c.group(1)))
+            continue
+        name, rest = mi.group(1), mi.group(2)
+        # opcode = first word followed by '(' after the type expression;
+        # the type may be a tuple "(f32[..], f32[..])" containing spaces.
+        op_m = re.search(r"([\w\-]+)\(", rest)
+        opcode = op_m.group(1) if op_m else ""
+        type_str = rest[:op_m.start()] if op_m else rest
+        dt, shape, tbytes = _parse_shapes(type_str)
+        symtab[name] = (dt, shape)
+        for c in _CONST_RE.finditer(rest):
+            st.max_const = max(st.max_const, int(c.group(1)))
+
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if opcode.endswith("-done"):
+            continue
+        if base in COLLECTIVE_OPS:
+            gsz = 1
+            mg = _IOTA_RG_RE.search(rest)
+            if mg:
+                gsz = int(mg.group(2))
+            else:
+                mb = _BRACE_RG_RE.search(rest)
+                if mb:
+                    gsz = len([x for x in mb.group(1).split(",") if x.strip()])
+            st.collectives.append(CollectiveStat(base, tbytes, gsz))
+            st.bytes += tbytes
+            continue
+        if opcode == "while":
+            mw = _WHILE_RE.search(rest)
+            if mw:
+                st.whiles.append((mw.group(1), mw.group(2)))
+            continue
+        if opcode in ("call", "conditional") or "calls=" in rest:
+            mc = _CALL_RE.search(rest)
+            if mc:
+                st.calls.append(mc.group(1))
+        if opcode == "dot":
+            st.flops += _dot_flops(line, symtab, shape)
+            st.bytes += tbytes
+            continue
+        if opcode == "dynamic-update-slice":
+            # bill the written slice (operand 1), not the whole buffer
+            mo = re.search(r"dynamic-update-slice\(([^)]*)\)", rest)
+            if mo:
+                ops = [o.strip().lstrip("%") for o in mo.group(1).split(",")]
+                if len(ops) >= 2 and ops[1] in symtab:
+                    dt2, shp2 = symtab[ops[1]]
+                    nel = 1
+                    for dd in shp2:
+                        nel *= dd
+                    st.bytes += nel * _DTYPE_BYTES.get(dt2, 4)
+            continue
+        if opcode == "fusion":
+            # count the fusion's output buffer; estimate elementwise flops
+            n = 1
+            for d in shape:
+                n *= d
+            st.flops += n
+            st.bytes += tbytes
+            # dots can live inside fusions: scan the fused computation later
+            mc = _CALL_RE.search(rest)
+            if mc:
+                st.calls.append(mc.group(1))
+            continue
+        if opcode in _MATERIALIZE:
+            st.bytes += tbytes
+    return st, symtab
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    flops: float
+    bytes: float
+    collective_bytes: Dict[str, float]
+    collective_link_bytes: float
+    n_collectives: int
+
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_module(text: str) -> ModuleStats:
+    comps = _split_computations(text)
+    entry_name = comps.get("__entry_name__")
+    entry = entry_name[0] if entry_name else None
+    stats_cache: Dict[str, CompStats] = {}
+    for name, lines in comps.items():
+        if name.startswith("__"):
+            continue
+        stats_cache[name], _ = analyze_computation(lines)
+
+    rolled: Dict[str, Tuple[float, float, Dict[str, float], float, int]] = {}
+
+    def roll(name: str, depth=0) -> Tuple[float, float, Dict[str, float],
+                                          float, int]:
+        if name in rolled:
+            return rolled[name]
+        if name not in stats_cache or depth > 32:
+            return (0.0, 0.0, {}, 0.0, 0)
+        st = stats_cache[name]
+        fl, by = st.flops, st.bytes
+        cb: Dict[str, float] = {}
+        lb = 0.0
+        nc = 0
+        for c in st.collectives:
+            cb[c.kind] = cb.get(c.kind, 0.0) + c.bytes_out
+            lb += c.link_bytes
+            nc += 1
+        for callee in st.calls:
+            f2, b2, c2, l2, n2 = roll(callee, depth + 1)
+            fl += f2
+            by += b2
+            for k, v in c2.items():
+                cb[k] = cb.get(k, 0.0) + v
+            lb += l2
+            nc += n2
+        for cond, body in st.whiles:
+            trips = max(stats_cache.get(cond, CompStats()).max_const, 1)
+            f2, b2, c2, l2, n2 = roll(body, depth + 1)
+            fl += trips * f2
+            by += trips * b2
+            for k, v in c2.items():
+                cb[k] = cb.get(k, 0.0) + trips * v
+            lb += trips * l2
+            nc += trips * n2
+        rolled[name] = (fl, by, cb, lb, nc)
+        return rolled[name]
+
+    if entry is None:  # fall back: sum every computation once
+        entry_stats = (0.0, 0.0, {}, 0.0, 0)
+    else:
+        entry_stats = roll(entry)
+    fl, by, cb, lb, nc = entry_stats
+    return ModuleStats(flops=fl, bytes=by, collective_bytes=cb,
+                       collective_link_bytes=lb, n_collectives=nc)

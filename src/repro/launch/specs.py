@@ -1,0 +1,86 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the kwargs passed to the lowered step:
+  train    -> {"batch": {tokens, labels[, frames|patches]}}
+  prefill  -> {"batch": {tokens[, frames|patches]}}
+  decode   -> {"cache": ..., "tokens": (B,1), "pos": (B,)}
+
+These are weak-type-correct and shardable; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as M
+
+S = jax.ShapeDtypeStruct
+
+
+def _modality_inputs(cfg: ModelConfig, b: int):
+    extra = {}
+    if cfg.encoder is not None:
+        extra["frames"] = S((b, cfg.encoder.n_frames, cfg.d_model),
+                            jnp.dtype(cfg.compute_dtype))
+    if cfg.vision is not None:
+        extra["patches"] = S((b, cfg.vision.n_img_tokens, cfg.vision.d_vision),
+                             jnp.dtype(cfg.compute_dtype))
+    return extra
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": S((b, s), jnp.int32), "labels": S((b, s), jnp.int32)}
+    batch.update(_modality_inputs(cfg, b))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": S((b, s), jnp.int32)}
+    batch.update(_modality_inputs(cfg, b))
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    return {"cache": cache,
+            "tokens": S((b, 1), jnp.int32),
+            "pos": S((b,), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape)}
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    raise ValueError(shape.kind)
+
+
+def concrete_inputs(cfg: ModelConfig, shape: InputShape, key=None):
+    """Small-scale concrete inputs matching input_specs (for smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+
+    def mk(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.zeros(s.shape, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    concrete = jax.tree.map(mk, specs)
+    if "batch" in concrete:
+        b = concrete["batch"]
+        tk = jax.random.randint(key, b["tokens"].shape, 0, cfg.vocab,
+                                dtype=jnp.int32)
+        b["tokens"] = tk
+        if "labels" in b:
+            b["labels"] = jnp.roll(tk, -1, axis=1)
+        for name in ("frames", "patches"):
+            if name in b:
+                b[name] = jax.random.normal(key, b[name].shape,
+                                            b[name].dtype) * 0.02
+    return concrete

@@ -1,0 +1,1 @@
+from repro.models import layers, model, moe, ssm  # noqa: F401

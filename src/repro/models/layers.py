@@ -1,0 +1,313 @@
+"""Shared neural-net layers (pure JAX, dict-pytree params).
+
+Conventions:
+  * params are stored float32; compute runs in ``cfg.compute_dtype``
+    (bf16 on TPU; smoke tests override to float32 for CPU numerics).
+  * attention weights are kept 4-D ``(D, H, hd)`` so the head axis can be
+    sharded over the ``model`` mesh axis when divisible (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def cdtype(cfg):
+    return jnp.dtype(getattr(cfg, "compute_dtype", "bfloat16"))
+
+
+def cx(x, cfg):
+    """Cast a param/activation to the compute dtype."""
+    return x.astype(cdtype(cfg))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, d):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """qk-norm: rmsnorm over the last (head) dim with learned scale (hd,)."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def gated_rmsnorm(scale, y, z, eps):
+    """Mamba-2 output norm: rmsnorm(y * silu(z)) with learned scale."""
+    y32 = (y * jax.nn.silu(z)).astype(jnp.float32)
+    ms = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(ms + eps) * scale).astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary / sinusoidal positions
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd, theta):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, n_heads, hd); positions: (..., S) int32 broadcastable."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(seq, d, offset=0):
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, d, f):
+    ks = jax.random.split(key, 3)
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    p = {
+        "wi": jax.random.normal(ks[0], (d, f), jnp.float32) * s_in,
+        "wo": jax.random.normal(ks[1], (f, d), jnp.float32) * s_out,
+    }
+    if cfg.mlp_act == "swiglu":
+        p["wg"] = jax.random.normal(ks[2], (d, f), jnp.float32) * s_in
+    return p
+
+
+def apply_mlp(p, x, cfg):
+    wi = cx(p["wi"], cfg)
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(x @ cx(p["wg"], cfg)) * (x @ wi)
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(x @ wi)
+    elif cfg.mlp_act == "squared_relu":
+        h = jnp.square(jax.nn.relu(x @ wi))
+    else:
+        raise ValueError(cfg.mlp_act)
+    return h @ cx(p["wo"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, cross=False):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd()
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    so = (h * hd) ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, hd), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, k, hd), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, k, hd), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h, hd, d), jnp.float32) * so,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), jnp.float32)
+        p["bk"] = jnp.zeros((k, hd), jnp.float32)
+        p["bv"] = jnp.zeros((k, hd), jnp.float32)
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, xq, xkv, cfg, q_positions=None, kv_positions=None, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", xq, cx(p["wq"], cfg))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, cx(p["wk"], cfg))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, cx(p["wv"], cfg))
+    if "bq" in p:
+        q = q + cx(p["bq"], cfg)
+        k = k + cx(p["bk"], cfg)
+        v = v + cx(p["bv"], cfg)
+    if "q_norm" in p:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if rope and cfg.use_rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores_to_out(q, k, v, mask, cfg):
+    """q (B,Q,H,hd); k,v (B,S,K,hd); mask (B?,Q,S) bool or None -> (B,Q,H,hd)."""
+    b, ql, h, hd = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qg = q.reshape(b, ql, kheads, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (hd ** -0.5)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        scores = jnp.tanh(scores / c) * c
+    if mask is not None:
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(b, ql, h, hd)
+
+
+def causal_mask(q_len, kv_len, q_offset=0, window=0):
+    """(q_len, kv_len) bool; True = attend. Optional sliding window."""
+    qpos = jnp.arange(q_len)[:, None] + q_offset
+    kpos = jnp.arange(kv_len)[None, :]
+    m = kpos <= qpos
+    if window:
+        m = m & (kpos > qpos - window)
+    return m
+
+
+def _chunked_attention(q, k, v, cfg, win, chunk=512):
+    """Blockwise causal attention: scan over q chunks so the score tensor is
+    (B, heads, chunk, S) instead of (B, heads, S, S) — an S/chunk reduction
+    in peak activation memory. With a sliding window the kv span is sliced
+    to (win + chunk) so compute also scales with the window. Pure jnp =>
+    SPMD-shardable; the Pallas swa_attention kernel is the on-TPU analog.
+    """
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = math_gcd_chunk(s, chunk)
+    nq = s // chunk
+    qc = jnp.moveaxis(q.reshape(b, nq, chunk, h, hd), 1, 0)   # (nq,b,c,h,hd)
+
+    span = s if not win else min(win + chunk, s)
+
+    def body(_, qi):
+        qb, idx = qi
+        q_start = idx * chunk
+        if win and span < s:
+            kv_start = jnp.clip(q_start + chunk - span, 0, s - span)
+            kb = jax.lax.dynamic_slice_in_dim(k, kv_start, span, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kv_start, span, axis=1)
+            kpos = kv_start + jnp.arange(span)[None, :]
+        else:
+            kb, vb = k, v
+            kpos = jnp.arange(s)[None, :]
+        qpos = q_start + jnp.arange(chunk)[:, None]
+        m = kpos[None] <= qpos[None]                        # (1,c,span)
+        if win:
+            m = m & (kpos[None] > qpos[None] - win)
+        ob = _gqa_scores_to_out(qb, kb, vb, m, cfg)
+        return None, ob
+
+    _, out = jax.lax.scan(body, None,
+                          (qc, jnp.arange(nq, dtype=jnp.int32)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def math_gcd_chunk(s, chunk):
+    import math
+    g = math.gcd(s, chunk)
+    return g if g > 1 else s
+
+
+def apply_attention_seq(p, x, cfg, positions, window=None, causal=True):
+    """Full-sequence (train/prefill) self attention. Returns (out, (k, v))."""
+    q, k, v = _qkv(p, x, x, cfg, positions, positions)
+    win = cfg.sliding_window if window is None else window
+    if cfg.attn_impl == "flash" and causal:
+        from repro.kernels.ops import swa_flash_attention
+        out = swa_flash_attention(q, k, v, window=win, causal=True)
+    elif cfg.attn_impl == "chunked" and causal:
+        out = _chunked_attention(q, k, v, cfg, win)
+    else:
+        if causal:
+            m = causal_mask(x.shape[1], x.shape[1], window=win)[None]
+        else:
+            m = None
+        out = _gqa_scores_to_out(q, k, v, m, cfg)
+    out = jnp.einsum("bqhk,hkd->bqd", out, cx(p["wo"], cfg))
+    return out, (k, v)
+
+
+def apply_attention_decode(p, x, cfg, k_cache, v_cache, pos, window=None):
+    """One-token decode. x (B,1,D); caches (B,S,K,hd); pos (B,) int32.
+
+    Caches are ring-buffers when ``window`` is set (position mod S);
+    otherwise plain append at ``pos``. Returns (out, new_k, new_v).
+    """
+    b, _, _ = x.shape
+    s = k_cache.shape[1]
+    q, k, v = _qkv(p, x, x, cfg, pos[:, None], pos[:, None])
+    slot = pos % s
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+    kpos = jnp.arange(s)[None, :]
+    win = cfg.sliding_window if window is None else window
+    if win:
+        # ring buffer: valid slots are the last `win` positions in [0, pos]
+        slotpos = _slot_position(kpos, pos[:, None], s)
+        age = pos[:, None] - slotpos
+        valid = (slotpos >= 0) & (age < jnp.minimum(win, s))
+    else:
+        valid = kpos <= pos[:, None]
+    m = valid[:, None, :]                                  # (B,1,S)
+    out = _gqa_scores_to_out(q, k_cache.astype(q.dtype),
+                             v_cache.astype(q.dtype), m, cfg)
+    out = jnp.einsum("bqhk,hkd->bqd", out, cx(p["wo"], cfg))
+    return out, k_cache, v_cache
+
+
+def _slot_position(slot, pos, s):
+    """Absolute position stored in ring slot `slot` when head is at `pos`."""
+    cur_slot = pos % s
+    delta = (cur_slot - slot) % s
+    return pos - delta
+
+
+def apply_cross_attention_seq(p, x, enc_out, cfg):
+    q, k, v = _qkv(p, x, enc_out, cfg, rope=False)
+    out = _gqa_scores_to_out(q, k, v, None, cfg)
+    return jnp.einsum("bqhk,hkd->bqd", out, cx(p["wo"], cfg)), (k, v)
+
+
+def apply_cross_attention_cached(p, x, k_cache, v_cache, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, cx(p["wq"], cfg))
+    if "bq" in p:
+        q = q + cx(p["bq"], cfg)
+    out = _gqa_scores_to_out(q, k_cache.astype(q.dtype),
+                             v_cache.astype(q.dtype), None, cfg)
+    return jnp.einsum("bqhk,hkd->bqd", out, cx(p["wo"], cfg))

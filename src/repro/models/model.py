@@ -1,0 +1,434 @@
+"""Model assembly: init / train / prefill / decode for every assigned arch.
+
+Layers are grouped by their offset inside the *effective period* P =
+lcm(layer_period, moe.every): all layers with the same offset share structure
+and are stacked (n_super, ...) so a single ``lax.scan`` over superblocks keeps
+the compiled graph one-period big (critical for 80-layer dry-run compiles).
+
+Params are dict pytrees, fp32 storage, ``cfg.compute_dtype`` compute.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_attention_decode,
+    apply_attention_seq,
+    apply_cross_attention_cached,
+    apply_cross_attention_seq,
+    apply_mlp,
+    apply_norm,
+    cdtype,
+    cx,
+    init_attention,
+    init_mlp,
+    init_norm,
+    sinusoid_positions,
+)
+from repro.models.moe import apply_moe, init_moe
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+
+def effective_period(cfg) -> int:
+    p = cfg.layer_period
+    if cfg.moe is not None:
+        p = math.lcm(p, cfg.moe.every)
+    return p
+
+
+def n_superblocks(cfg) -> int:
+    p = effective_period(cfg)
+    assert cfg.n_layers % p == 0, (cfg.name, cfg.n_layers, p)
+    return cfg.n_layers // p
+
+
+def _offset_kind(cfg, o):
+    """('attn'|'ssm', 'moe'|'mlp'|None) for layer offset o."""
+    mixer = "attn" if cfg.is_attn_layer(o) else "ssm"
+    if cfg.arch_type == "ssm":
+        ffn = None
+    elif cfg.is_moe_layer(o):
+        ffn = "moe"
+    else:
+        ffn = "mlp" if cfg.d_ff > 0 else None
+    return mixer, ffn
+
+
+# ---------------------------------------------------------------------------
+# sublayer init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_sublayer(key, cfg, o, with_xattn=False):
+    mixer, ffn = _offset_kind(cfg, o)
+    ks = jax.random.split(key, 6)
+    p = {}
+    if cfg.parallel_block:
+        p["norm"] = init_norm(cfg, cfg.d_model)
+    else:
+        p["norm1"] = init_norm(cfg, cfg.d_model)
+        if ffn is not None:
+            p["norm2"] = init_norm(cfg, cfg.d_model)
+    if mixer == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+    if with_xattn:
+        p["norm_x"] = init_norm(cfg, cfg.d_model)
+        p["xattn"] = init_attention(ks[1], cfg, cross=True)
+    if ffn == "moe":
+        p["moe"] = init_moe(ks[2], cfg, cfg.d_model)
+    elif ffn == "mlp":
+        p["mlp"] = init_mlp(ks[2], cfg, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def apply_sublayer_seq(p, h, cfg, positions, o, enc_out=None, ssm_state=None):
+    """Full-sequence pass. Returns (h, aux_loss, cache_entry)."""
+    mixer, ffn = _offset_kind(cfg, o)
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = {}
+    if cfg.parallel_block:
+        hn = apply_norm(p["norm"], h, cfg)
+        attn_out, (k, v) = apply_attention_seq(p["attn"], hn, cfg, positions)
+        mlp_out = apply_mlp(p["mlp"], hn, cfg)
+        h = h + attn_out + mlp_out
+        cache_entry = {"k": k, "v": v}
+        return h, aux, cache_entry
+
+    hn = apply_norm(p["norm1"], h, cfg)
+    if mixer == "attn":
+        out, (k, v) = apply_attention_seq(p["attn"], hn, cfg, positions)
+        cache_entry = {"k": k, "v": v}
+    else:
+        out, (conv_tail, final_state) = ssm_mod.apply_ssm_seq(
+            p["ssm"], hn, cfg, ssm_state)
+        cache_entry = {"conv": conv_tail, "ssm": final_state}
+    h = h + out
+    if "xattn" in p:
+        hn = apply_norm(p["norm_x"], h, cfg)
+        out, (xk, xv) = apply_cross_attention_seq(p["xattn"], hn, enc_out, cfg)
+        cache_entry["xk"], cache_entry["xv"] = xk, xv
+        h = h + out
+    if ffn == "moe":
+        hn = apply_norm(p["norm2"], h, cfg)
+        out, aux = apply_moe(p["moe"], hn, cfg)
+        h = h + out
+    elif ffn == "mlp":
+        hn = apply_norm(p["norm2"], h, cfg)
+        h = h + apply_mlp(p["mlp"], hn, cfg)
+    return h, aux, cache_entry
+
+
+def apply_sublayer_decode(p, h, cfg, cache_o, pos, o):
+    """One-token decode. Returns (h, new_cache_o)."""
+    mixer, ffn = _offset_kind(cfg, o)
+    nc = dict(cache_o)
+    if cfg.parallel_block:
+        hn = apply_norm(p["norm"], h, cfg)
+        attn_out, nk, nv = apply_attention_decode(
+            p["attn"], hn, cfg, cache_o["k"], cache_o["v"], pos)
+        mlp_out = apply_mlp(p["mlp"], hn, cfg)
+        nc["k"], nc["v"] = nk, nv
+        return h + attn_out + mlp_out, nc
+
+    hn = apply_norm(p["norm1"], h, cfg)
+    if mixer == "attn":
+        out, nk, nv = apply_attention_decode(
+            p["attn"], hn, cfg, cache_o["k"], cache_o["v"], pos)
+        nc["k"], nc["v"] = nk, nv
+    else:
+        out, st = ssm_mod.apply_ssm_decode(
+            p["ssm"], hn, cfg, {"conv": cache_o["conv"], "ssm": cache_o["ssm"]})
+        nc["conv"], nc["ssm"] = st["conv"], st["ssm"]
+    h = h + out
+    if "xattn" in p:
+        hn = apply_norm(p["norm_x"], h, cfg)
+        h = h + apply_cross_attention_cached(
+            p["xattn"], hn, cache_o["xk"], cache_o["xv"], cfg)
+    if ffn == "moe":
+        hn = apply_norm(p["norm2"], h, cfg)
+        out, _ = apply_moe(p["moe"], hn, cfg)
+        h = h + out
+    elif ffn == "mlp":
+        hn = apply_norm(p["norm2"], h, cfg)
+        h = h + apply_mlp(p["mlp"], hn, cfg)
+    return h, nc
+
+
+# ---------------------------------------------------------------------------
+# whole-model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    P = effective_period(cfg)
+    ns = n_superblocks(cfg)
+    keys = jax.random.split(key, P + 4)
+    with_x = cfg.encoder is not None
+    layers = []
+    for o in range(P):
+        oks = jax.random.split(keys[o], ns)
+        layers.append(jax.vmap(
+            lambda k, _o=o: init_sublayer(k, cfg, _o, with_xattn=with_x))(oks))
+    params = {
+        "tok_embed": jax.random.normal(
+            keys[P], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02,
+        "layers": tuple(layers),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            keys[P + 1], (cfg.d_model, cfg.vocab), jnp.float32) \
+            * (cfg.d_model ** -0.5)
+    if cfg.encoder is not None:
+        eks = jax.random.split(keys[P + 2], cfg.encoder.n_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: init_sublayer(k, cfg, 0, with_xattn=False))(eks),
+            "final_norm": init_norm(cfg, cfg.d_model),
+        }
+    if cfg.vision is not None:
+        params["vision_proj"] = {
+            "w": jax.random.normal(
+                keys[P + 3], (cfg.vision.d_vision, cfg.d_model), jnp.float32)
+            * (cfg.vision.d_vision ** -0.5),
+            "b": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def apply_stack_seq(params, cfg, h, positions, enc_out=None):
+    """Scan over superblocks. Returns (h, aux_total, cache tuple-of-dicts)."""
+    P = effective_period(cfg)
+
+    def body(carry, layer_ps):
+        hh, aux = carry
+        entries = []
+        for o in range(P):
+            hh, a, ce = apply_sublayer_seq(
+                layer_ps[o], hh, cfg, positions, o, enc_out=enc_out)
+            aux = aux + a
+            entries.append(ce)
+        return (hh, aux), tuple(entries)
+
+    body = _remat(body, cfg)
+    (h, aux), cache = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    return h, aux, cache
+
+
+def apply_stack_decode(params, cfg, h, cache, pos):
+    P = effective_period(cfg)
+
+    def body(hh, xs):
+        layer_ps, cache_os = xs
+        new_entries = []
+        for o in range(P):
+            hh, nce = apply_sublayer_decode(layer_ps[o], hh, cfg, cache_os[o],
+                                            pos, o)
+            new_entries.append(nce)
+        return hh, tuple(new_entries)
+
+    h, new_cache = jax.lax.scan(body, h, (params["layers"], cache))
+    return h, new_cache
+
+
+def apply_encoder(params, cfg, frames):
+    """Whisper-style encoder over stubbed frame embeddings (B, T, D)."""
+    h = frames.astype(cdtype(cfg))
+    h = h + sinusoid_positions(frames.shape[1], cfg.d_model).astype(h.dtype)
+
+    def body(hh, layer_p):
+        hn = apply_norm(layer_p["norm1"], hh, cfg)
+        out, _ = apply_attention_seq(layer_p["attn"], hn, cfg,
+                                     positions=None, causal=False)
+        hh = hh + out
+        hn = apply_norm(layer_p["norm2"], hh, cfg)
+        hh = hh + apply_mlp(layer_p["mlp"], hn, cfg)
+        return hh, None
+
+    body = _remat(body, cfg)
+    h, _ = jax.lax.scan(body, h, params["encoder"]["layers"])
+    return apply_norm(params["encoder"]["final_norm"], h, cfg)
+
+
+# ---------------------------------------------------------------------------
+# embeddings & logits
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, cfg, batch, positions):
+    tokens = batch["tokens"]
+    h = jnp.take(params["tok_embed"], tokens, axis=0).astype(cdtype(cfg))
+    if cfg.vision is not None and "patches" in batch:
+        vp = params["vision_proj"]
+        img = batch["patches"].astype(cdtype(cfg)) @ cx(vp["w"], cfg) \
+            + cx(vp["b"], cfg)
+        n = cfg.vision.n_img_tokens
+        h = jnp.concatenate([img[:, :n, :], h[:, n:, :]], axis=1)
+    if cfg.encoder is not None:  # whisper decoder: sinusoid abs positions
+        h = h + sinusoid_positions(h.shape[1], cfg.d_model).astype(h.dtype)
+    return h
+
+
+def logits_from_h(params, cfg, h):
+    h = apply_norm(params["final_norm"], h, cfg)
+    if cfg.tie_embeddings:
+        w = cx(params["tok_embed"], cfg).T
+    else:
+        w = cx(params["unembed"], cfg)
+    return jnp.einsum("bsd,dv->bsv", h, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def apply_train(params, cfg, batch):
+    """Teacher-forced full-sequence forward. Returns (logits f32, aux)."""
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = embed_inputs(params, cfg, batch, positions)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = apply_encoder(params, cfg, batch["frames"])
+    h, aux, _ = apply_stack_seq(params, cfg, h, positions, enc_out)
+    return logits_from_h(params, cfg, h), aux
+
+
+def prefill(params, cfg, batch):
+    """Forward + cache build. Returns (last-token logits (B,1,V), cache)."""
+    b, s = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = embed_inputs(params, cfg, batch, positions)
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = apply_encoder(params, cfg, batch["frames"])
+    h, _, cache = apply_stack_seq(params, cfg, h, positions, enc_out)
+    logits = logits_from_h(params, cfg, h[:, -1:, :])
+    return logits, cache
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    """tokens (B,1) int32; pos (B,) int32. Returns (logits (B,1,V), cache)."""
+    h = jnp.take(params["tok_embed"], tokens, axis=0).astype(cdtype(cfg))
+    if cfg.encoder is not None:
+        d = cfg.d_model
+        div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32)
+                      * (-jnp.log(10000.0) / d))
+        ang = pos[:, None].astype(jnp.float32) * div
+        # interleave to match sinusoid_positions layout
+        pe = jnp.stack([jnp.sin(ang), jnp.cos(ang)], axis=-1).reshape(
+            pos.shape[0], d)
+        h = h + pe[:, None, :].astype(h.dtype)
+    h, new_cache = apply_stack_decode(params, cfg, h, cache, pos)
+    logits = logits_from_h(params, cfg, h)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def cache_seq_len(cfg, seq_len):
+    """KV rows actually resident: sliding-window archs keep a ring buffer."""
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg, batch, seq_len, dtype=None):
+    """Zeroed decode cache matching apply_stack_decode's expectations."""
+    dtype = dtype or cdtype(cfg)
+    P = effective_period(cfg)
+    ns = n_superblocks(cfg)
+    hd = cfg.hd()
+    s_res = cache_seq_len(cfg, seq_len)
+    entries = []
+    for o in range(P):
+        mixer, _ = _offset_kind(cfg, o)
+        e = {}
+        if mixer == "attn" or cfg.parallel_block:
+            e["k"] = jnp.zeros((ns, batch, s_res, cfg.n_kv_heads, hd), dtype)
+            e["v"] = jnp.zeros((ns, batch, s_res, cfg.n_kv_heads, hd), dtype)
+        else:
+            s = cfg.ssm
+            d_in = s.d_inner(cfg.d_model)
+            h = s.n_heads(cfg.d_model)
+            gn = s.n_groups * s.d_state
+            e["conv"] = jnp.zeros((ns, batch, s.conv_width - 1, d_in + 2 * gn),
+                                  dtype)
+            e["ssm"] = jnp.zeros((ns, batch, h, s.head_dim, s.d_state),
+                                 jnp.float32)
+        if cfg.encoder is not None:
+            e["xk"] = jnp.zeros((ns, batch, cfg.encoder.n_frames,
+                                 cfg.n_kv_heads, hd), dtype)
+            e["xv"] = jnp.zeros((ns, batch, cfg.encoder.n_frames,
+                                 cfg.n_kv_heads, hd), dtype)
+        entries.append(e)
+    return tuple(entries)
+
+
+def convert_prefill_cache(cfg, cache, prefill_len, target_len, dtype=None):
+    """Repack a prefill-built cache for decode continuation.
+
+    Full attention: pad the seq axis to ``target_len``. Sliding window: fold
+    the last ``window`` positions into ring-buffer order (slot = pos % window).
+    SSM entries (conv tail / state) already match decode layout.
+    """
+    dtype = dtype or cdtype(cfg)
+    s_res = cache_seq_len(cfg, target_len)
+    out = []
+    for e in cache:
+        ne = {}
+        for name, arr in e.items():
+            if name in ("k", "v"):
+                if cfg.sliding_window and cfg.sliding_window < prefill_len:
+                    win = s_res
+                    slots = jnp.arange(win)
+                    srcpos = prefill_len - 1 - ((prefill_len - 1 - slots) % win)
+                    arr = jnp.take(arr, srcpos, axis=2)
+                elif arr.shape[2] < s_res:
+                    pad = [(0, 0)] * arr.ndim
+                    pad[2] = (0, s_res - arr.shape[2])
+                    arr = jnp.pad(arr, pad)
+                else:
+                    arr = arr[:, :, :s_res]
+                ne[name] = arr.astype(dtype)
+            elif name in ("xk", "xv"):
+                ne[name] = arr.astype(dtype)
+            else:  # conv / ssm state
+                ne[name] = arr
+        out.append(ne)
+    return tuple(out)
+
+
+def abstract_params(cfg, key=None):
+    """Shape/dtype tree of params without allocating (for the dry-run)."""
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(partial(init_params, cfg=cfg), k)

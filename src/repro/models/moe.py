@@ -1,0 +1,115 @@
+"""Mixture-of-Experts with static-shape, sort-based token dispatch.
+
+Dispatch never materializes a (tokens, experts, capacity) one-hot: token→slot
+assignment is built with an argsort over expert ids plus per-expert rank
+(MegaBlocks/MaxText-style), then a gather into an (E, capacity, D) buffer,
+batched expert matmuls, and a scatter-add combine. All shapes static =>
+jit/pjit friendly; SPMD shards the expert matmuls over the mesh.
+
+Router: softmax over experts then top-k, renormalized (Mixtral-style), with a
+load-balance auxiliary loss (Switch-style) returned to the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cx
+
+
+def init_moe(key, cfg, d):
+    m = cfg.moe
+    ks = jax.random.split(key, 4)
+    s_in = d ** -0.5
+    s_out = m.d_ff_expert ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, m.n_experts), jnp.float32) * s_in,
+        "wi": jax.random.normal(ks[1], (m.n_experts, d, m.d_ff_expert),
+                                jnp.float32) * s_in,
+        "wo": jax.random.normal(ks[2], (m.n_experts, m.d_ff_expert, d),
+                                jnp.float32) * s_out,
+    }
+    if cfg.mlp_act == "swiglu":
+        p["wg"] = jax.random.normal(ks[3], (m.n_experts, d, m.d_ff_expert),
+                                    jnp.float32) * s_in
+    return p
+
+
+def router_topk(p, x2d, cfg):
+    """x2d (T, D) -> (gates (T,k), idx (T,k), aux_loss scalar f32)."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, m.top_k)                 # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e
+    e_onehot_mean = jnp.zeros((m.n_experts,), jnp.float32).at[
+        idx.reshape(-1)].add(1.0) / (idx.size)
+    p_mean = probs.mean(0)
+    aux = m.n_experts * jnp.sum(e_onehot_mean * p_mean)
+    return gates.astype(x2d.dtype), idx, aux
+
+
+def _dispatch_indices(idx, n_experts, capacity):
+    """idx (T, k) expert assignments -> (slot (T*k,), keep (T*k,), order).
+
+    slot[i] is the row in the (E*capacity, D) buffer for flat assignment i
+    (sorted order); keep masks capacity overflow. order maps sorted->flat.
+    """
+    tk = idx.size
+    flat_e = idx.reshape(-1)                       # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)       # sorted by expert
+    sorted_e = flat_e[order]
+    # rank within expert = position - start offset of that expert
+    counts = jnp.zeros((n_experts,), jnp.int32).at[sorted_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e]
+    keep = rank < capacity
+    slot = sorted_e * capacity + jnp.minimum(rank, capacity - 1)
+    return slot, keep, order, sorted_e
+
+
+def apply_moe(p, x, cfg):
+    """x (B, S, D) -> (out (B, S, D), aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    x2d = x.reshape(t, d)
+    gates, idx, aux = router_topk(p, x2d, cfg)
+
+    if t <= 4096:
+        # decode / tiny batches: full capacity => never drop a token
+        capacity = t
+    else:
+        capacity = max(int(m.capacity_factor * t * m.top_k / m.n_experts),
+                       m.top_k)
+    slot, keep, order, _ = _dispatch_indices(idx, m.n_experts, capacity)
+
+    token_of = jnp.repeat(jnp.arange(t, dtype=jnp.int32), m.top_k)[order]
+    gate_of = gates.reshape(-1)[order]
+
+    # gather tokens into (E*capacity, D) buffer. Dropped rows all collide on
+    # slot capacity-1 — use add(0) not set(0) so they can't clobber kept rows.
+    buf = jnp.zeros((m.n_experts * capacity, d), x.dtype)
+    buf = buf.at[slot].add(jnp.where(keep[:, None], x2d[token_of], 0))
+    buf = buf.reshape(m.n_experts, capacity, d)
+
+    # expert computation (batched over E)
+    wi = cx(p["wi"], cfg)
+    wo = cx(p["wo"], cfg)
+    h = jnp.einsum("ecd,edf->ecf", buf, wi)
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", buf, cx(p["wg"], cfg))
+        h = jax.nn.silu(g) * h
+    elif cfg.mlp_act == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.mlp_act == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo).reshape(
+        m.n_experts * capacity, d)
+
+    # combine: weighted scatter-add back to tokens
+    contrib = out_buf[slot] * (gate_of * keep.astype(gate_of.dtype))[:, None]
+    y = jnp.zeros((t, d), x.dtype).at[token_of].add(contrib)
+    return y.reshape(b, s, d), aux

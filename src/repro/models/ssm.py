@@ -1,0 +1,221 @@
+"""Mamba-2 (SSD, state-space duality) mixer — pure JAX reference path.
+
+Sequence mode uses the chunked SSD algorithm (arXiv:2405.21060 §6): quadratic
+attention-like computation inside chunks, linear recurrence across chunks.
+Decode mode is the O(1)-per-token recurrent update. The intra-chunk hot loop
+has a Pallas TPU kernel in ``repro.kernels.ssd_scan`` (ops.py dispatches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cx, gated_rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_ssm(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.d_inner(d)
+    h = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    conv_ch = d_in + 2 * gn
+    ks = jax.random.split(key, 5)
+    sc = d ** -0.5
+    # dt bias init so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[3], (h,), jnp.float32)
+    dt = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))          # inverse softplus
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, 2 * d_in + 2 * gn + h),
+                                     jnp.float32) * sc,
+        "conv_w": jax.random.normal(ks[1], (s.conv_width, conv_ch),
+                                    jnp.float32) * (s.conv_width ** -0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), jnp.float32)
+        * (d_in ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (sequence mode)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x):
+    """x (..., c) -> (..., c, c) with out[i, j] = sum_{j+1..i} x, -inf above diag."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk, init_state=None):
+    """Chunked SSD.
+
+    x (b,l,h,p); dt (b,l,h) post-softplus; A (h,) negative; B,C (b,l,g,n).
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    rep = h // g
+
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,c,h,n)
+    Cr = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtr * A                                        # (b,nc,c,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))      # (b,nc,h,c,c)
+    CB = jnp.einsum("bzihn,bzjhn->bzhij", Cr, Br,
+                    preferred_element_type=jnp.float32)
+    y_diag = jnp.einsum("bzhij,bzjh,bzjhp->bzihp", CB * L, dtr, xr)
+
+    # 2) per-chunk output states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)  # (b,nc,c,h)
+    states = jnp.einsum("bzchn,bzch,bzchp->bzhpn", Br, dtr * decay_states, xr)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])            # (b,nc,h)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), states.dtype)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                # emit state BEFORE chunk
+
+    # scan over chunk axis => move nc first
+    st_seq = jnp.moveaxis(states, 1, 0)                  # (nc,b,h,p,n)
+    dec_seq = jnp.moveaxis(chunk_decay, 1, 0)            # (nc,b,h)
+    final_state, prev_states = jax.lax.scan(step, init_state, (st_seq, dec_seq))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)        # (b,nc,h,p,n)
+
+    # 4) contribution of carried-in state to each position
+    state_decay = jnp.exp(dA_cs)                         # (b,nc,c,h)
+    y_off = jnp.einsum("bzchn,bzhpn,bzch->bzchp", Cr, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y.astype(x.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(z_xbc_dt, cfg):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    h = s.n_heads(cfg.d_model)
+    z = z_xbc_dt[..., :d_in]
+    xbc = z_xbc_dt[..., d_in:d_in + d_in + 2 * gn]
+    dt = z_xbc_dt[..., -h:]
+    return z, xbc, dt
+
+
+def _conv_seq(p, xbc, cfg):
+    """Causal depthwise conv over (B, L, CH)."""
+    w = cx(p["conv_w"], cfg)                 # (W, CH)
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):                   # width is 4: unrolled taps
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i]
+    return jax.nn.silu(out + cx(p["conv_b"], cfg))
+
+
+def apply_ssm_seq(p, x, cfg, init_state=None):
+    """x (B, L, D) -> (out (B, L, D), (conv_tail, final_state))."""
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    proj = x @ cx(p["in_proj"], cfg)
+    z, xbc, dt = _split_proj(proj, cfg)
+    conv_tail = xbc[:, -(s.conv_width - 1):, :]          # for decode handoff
+    xbc = _conv_seq(p, xbc, cfg)
+    xs = xbc[..., :d_in].reshape(x.shape[0], x.shape[1], h, s.head_dim)
+    B = xbc[..., d_in:d_in + gn].reshape(x.shape[0], x.shape[1], s.n_groups,
+                                         s.d_state)
+    C = xbc[..., d_in + gn:].reshape(x.shape[0], x.shape[1], s.n_groups,
+                                     s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if getattr(cfg, "ssm_impl", "jnp") == "pallas":
+        from repro.kernels.ops import ssd_chunked_kernel
+        y, final_state = ssd_chunked_kernel(
+            xs.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+            C.astype(jnp.float32), min(s.chunk, x.shape[1]), init_state)
+    else:
+        y, final_state = ssd_chunked(
+            xs.astype(jnp.float32), dt, A, B.astype(jnp.float32),
+            C.astype(jnp.float32), min(s.chunk, x.shape[1]), init_state)
+    y = y + xs.astype(jnp.float32) * p["D"][:, None]
+    y = y.reshape(x.shape[0], x.shape[1], d_in).astype(x.dtype)
+    y = gated_rmsnorm(p["norm_scale"], y, z, cfg.norm_eps)
+    return y @ cx(p["out_proj"], cfg), (conv_tail, final_state)
+
+
+def init_ssm_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    conv_ch = d_in + 2 * gn
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def apply_ssm_decode(p, x, cfg, state):
+    """One-token decode. x (B, 1, D); state dict -> (out (B,1,D), new state)."""
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    h = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    proj = x[:, 0] @ cx(p["in_proj"], cfg)               # (B, ·)
+    z, xbc, dt = _split_proj(proj, cfg)
+
+    # depthwise conv over rolling window
+    conv_prev = state["conv"].astype(xbc.dtype)          # (B, W-1, CH)
+    window = jnp.concatenate([conv_prev, xbc[:, None, :]], axis=1)  # (B,W,CH)
+    w = cx(p["conv_w"], cfg)
+    xbc_c = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + cx(p["conv_b"], cfg))
+    new_conv = window[:, 1:, :].astype(state["conv"].dtype)
+
+    xs = xbc_c[..., :d_in].reshape(-1, h, s.head_dim).astype(jnp.float32)
+    B = xbc_c[..., d_in:d_in + gn].reshape(-1, s.n_groups, s.d_state)
+    C = xbc_c[..., d_in + gn:].reshape(-1, s.n_groups, s.d_state)
+    rep = h // s.n_groups
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)  # (B, h, n)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, h)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                  # (B, h)
+    st = state["ssm"]                                     # (B, h, p, n)
+    st = st * dA[..., None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, Bh, xs)
+    y = jnp.einsum("bhpn,bhn->bhp", st, Ch) + xs * p["D"][:, None]
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = gated_rmsnorm(p["norm_scale"], y, z, cfg.norm_eps)
+    out = (y @ cx(p["out_proj"], cfg))[:, None, :]
+    return out, {"conv": new_conv, "ssm": st}

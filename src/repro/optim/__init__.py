@@ -1,0 +1,10 @@
+from repro.optim.optimizers import (
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    sgd_init,
+    sgd_update,
+)
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm",
+           "sgd_init", "sgd_update"]

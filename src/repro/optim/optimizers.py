@@ -1,0 +1,86 @@
+"""Optimizers in pure JAX (optax is not available offline).
+
+State layouts mirror the param pytree so sharding specs transfer 1:1
+(ZeRO-style: optimizer state inherits the 2-D FSDP×TP sharding of params).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def clip_by_global_norm(grads, max_norm):
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    return cfg.lr * warm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+
+    stepf = step.astype(jnp.float32)
+    newm = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        state["m"], grads)
+    newv = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state["v"], grads)
+
+    def upd(p, m, v):
+        mhat = m / (1 - b1 ** stepf)
+        vhat = v / (1 - b2 ** stepf)
+        newp = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                         + cfg.weight_decay * p)
+        return newp.astype(p.dtype)
+
+    newp = jax.tree.map(upd, params, newm, newv)
+    return newp, {"m": newm, "v": newv, "step": step}, gnorm
+
+
+def sgd_init(params, momentum=0.0):
+    if momentum:
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                   params)}
+    return {}
+
+
+def sgd_update(params, grads, state, lr, momentum=0.0):
+    if momentum and "mu" in state:
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        newp = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                            params, mu)
+        return newp, {"mu": mu}
+    newp = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                        params, grads)
+    return newp, state

@@ -1,0 +1,15 @@
+from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.groundstations import IGS_STATIONS, gs_ecef
+from repro.orbit.propagate import eci_positions, ecef_positions
+from repro.orbit.visibility import (
+    access_windows,
+    elevation_mask_series,
+    interplane_los_series,
+    windows_from_bool,
+)
+
+__all__ = [
+    "WalkerStar", "satellite_elements", "IGS_STATIONS", "gs_ecef",
+    "eci_positions", "ecef_positions", "access_windows",
+    "elevation_mask_series", "interplane_los_series", "windows_from_bool",
+]

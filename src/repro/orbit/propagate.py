@@ -1,0 +1,38 @@
+"""Circular Keplerian propagation, vectorized in JAX.
+
+ECI frame: orbit plane defined by RAAN Omega and inclination i; true anomaly
+nu(t) = phase + n*t with mean motion n = sqrt(mu/a^3) (circular => nu == M).
+ECEF obtained by rotating ECI by -omega_earth * t about z.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.orbit.constellation import MU_EARTH, OMEGA_EARTH, WalkerStar
+
+
+def eci_positions(c: WalkerStar, raan, phase, incl_rad, times):
+    """Positions (T, K, 3) in meters for satellite element arrays (K,)."""
+    a = c.radius_m
+    n = jnp.sqrt(MU_EARTH / a ** 3)
+    t = jnp.asarray(times)[:, None]                       # (T, 1)
+    nu = phase[None, :] + n * t                           # (T, K)
+    cosO, sinO = jnp.cos(raan), jnp.sin(raan)             # (K,)
+    cosi, sini = jnp.cos(incl_rad), jnp.sin(incl_rad)
+    cosu, sinu = jnp.cos(nu), jnp.sin(nu)
+    # perifocal -> ECI for circular orbit (argument of perigee = 0)
+    x = a * (cosO * cosu - sinO * sinu * cosi)
+    y = a * (sinO * cosu + cosO * sinu * cosi)
+    z = a * (sinu * sini)
+    return jnp.stack([x, y, z], axis=-1)                  # (T, K, 3)
+
+
+def ecef_positions(c: WalkerStar, raan, phase, incl_rad, times):
+    """ECI -> ECEF by earth rotation. (T, K, 3)."""
+    eci = eci_positions(c, raan, phase, incl_rad, times)
+    t = jnp.asarray(times)
+    th = -OMEGA_EARTH * t
+    cos_t, sin_t = jnp.cos(th)[:, None], jnp.sin(th)[:, None]
+    x = eci[..., 0] * cos_t - eci[..., 1] * sin_t
+    y = eci[..., 0] * sin_t + eci[..., 1] * cos_t
+    return jnp.stack([x, y, eci[..., 2]], axis=-1)

@@ -1,0 +1,97 @@
+"""Visibility: satellite<->ground-station elevation masks, inter-plane LOS,
+and boolean-series -> access-window extraction. Math vectorized in JAX,
+window bookkeeping in numpy (host-side event logic).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbit.constellation import R_EARTH, WalkerStar
+from repro.orbit.propagate import ecef_positions, eci_positions
+
+
+def elevation_mask_series(c: WalkerStar, raan, phase, incl, times, gs,
+                          min_elev_deg: float = 10.0, chunk: int = 4096):
+    """Boolean visibility (T, K, G): sat k visible from station g at time t."""
+    gs = jnp.asarray(gs)                                   # (G, 3)
+    min_sin = jnp.sin(jnp.radians(min_elev_deg))
+
+    @jax.jit
+    def block(ts):
+        sat = ecef_positions(c, raan, phase, incl, ts)     # (T, K, 3)
+        rel = sat[:, :, None, :] - gs[None, None, :, :]    # (T, K, G, 3)
+        up = gs / jnp.linalg.norm(gs, axis=-1, keepdims=True)
+        rng = jnp.linalg.norm(rel, axis=-1)
+        sin_el = jnp.einsum("tkgi,gi->tkg", rel, up) / jnp.maximum(rng, 1.0)
+        return sin_el >= min_sin
+
+    outs = []
+    times = np.asarray(times)
+    for i in range(0, len(times), chunk):
+        outs.append(np.asarray(block(jnp.asarray(times[i:i + chunk]))))
+    return np.concatenate(outs, axis=0)
+
+
+def interplane_los_series(c: WalkerStar, raan, phase, incl, times,
+                          sat_a: int, sat_b: int, max_range_m: float = 6e6,
+                          chunk: int = 8192):
+    """Boolean LOS (T,) between two satellites: range bound + earth not in
+    the way (perpendicular distance of segment to geocenter > R_earth+50km).
+    """
+    @jax.jit
+    def block(ts):
+        pos = eci_positions(c, raan, phase, incl, ts)      # (T, K, 3)
+        pa, pb = pos[:, sat_a], pos[:, sat_b]              # (T, 3)
+        d = pb - pa
+        rng = jnp.linalg.norm(d, axis=-1)
+        # closest point of segment to origin
+        tpar = jnp.clip(-jnp.einsum("ti,ti->t", pa, d)
+                        / jnp.maximum(rng ** 2, 1.0), 0.0, 1.0)
+        closest = pa + tpar[:, None] * d
+        clear = jnp.linalg.norm(closest, axis=-1) > (R_EARTH + 50_000.0)
+        return (rng <= max_range_m) & clear
+
+    outs = []
+    times = np.asarray(times)
+    for i in range(0, len(times), chunk):
+        outs.append(np.asarray(block(jnp.asarray(times[i:i + chunk]))))
+    return np.concatenate(outs, axis=0)
+
+
+def windows_from_bool(vis: np.ndarray, times: np.ndarray
+                      ) -> List[Tuple[float, float]]:
+    """(T,) bool -> [(t_start, t_end)] contiguous visibility windows."""
+    vis = np.asarray(vis, bool)
+    if vis.ndim != 1:
+        raise ValueError("1-D series expected")
+    if not vis.any():
+        return []
+    d = np.diff(vis.astype(np.int8))
+    starts = list(np.where(d == 1)[0] + 1)
+    ends = list(np.where(d == -1)[0] + 1)
+    if vis[0]:
+        starts = [0] + starts
+    if vis[-1]:
+        ends = ends + [len(vis)]
+    return [(float(times[s]), float(times[min(e, len(times) - 1)]))
+            for s, e in zip(starts, ends)]
+
+
+def access_windows(c: WalkerStar, raan, phase, incl, times, gs,
+                   min_elev_deg: float = 10.0):
+    """Per-satellite list of (t_start, t_end, gs_index) windows, sorted."""
+    vis = elevation_mask_series(c, raan, phase, incl, times, gs, min_elev_deg)
+    times = np.asarray(times)
+    out = []
+    for k in range(vis.shape[1]):
+        wins = []
+        for g in range(vis.shape[2]):
+            for (s, e) in windows_from_bool(vis[:, k, g], times):
+                wins.append((s, e, g))
+        wins.sort()
+        out.append(wins)
+    return out

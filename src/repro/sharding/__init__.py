@@ -1,0 +1,10 @@
+from repro.sharding.partition import (
+    batch_specs,
+    cache_specs,
+    decode_arg_specs,
+    param_specs,
+    train_state_specs,
+)
+
+__all__ = ["batch_specs", "cache_specs", "decode_arg_specs", "param_specs",
+           "train_state_specs"]

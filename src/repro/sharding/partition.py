@@ -1,0 +1,206 @@
+"""Path-based parameter & input partitioning rules (DESIGN.md §3).
+
+2-D sharding: every large weight puts one dim on ``model`` (tensor parallel)
+and one on ``data`` (FSDP/ZeRO-3 storage sharding; XLA SPMD inserts the
+per-layer all-gathers). Dims shard only when divisible by the axis size —
+e.g. whisper/mamba2 vocab sizes are indivisible by 16 and stay replicated.
+
+Mesh axes: single-pod ("data", "model"); multi-pod ("pod", "data", "model").
+Params never shard over ``pod`` (each pod = one AutoFLSat cluster replica);
+batch shards over ("pod", "data").
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import model as M
+
+# ---------------------------------------------------------------------------
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _maybe(mesh, axis, dim):
+    """Use `axis` for a dim of size `dim` only when divisible."""
+    return axis if dim % _axsize(mesh, axis) == 0 else None
+
+
+def _rule(mesh, path_names, shape, expert_parallel=False):
+    """PartitionSpec for one (unstacked) param leaf."""
+    name = path_names[-1]
+    d = _maybe
+    if name == "tok_embed":
+        return P(d(mesh, "model", shape[0]), d(mesh, "data", shape[1]))
+    if name == "unembed":
+        return P(d(mesh, "data", shape[0]), d(mesh, "model", shape[1]))
+    # NOTE: never shard the hd (head-feature) dim — attention contracts over
+    # it, and a sharded contraction makes SPMD emit a psum of the full
+    # (heads, S, S) score tensor (8258s collective term on qwen3 prefill_32k,
+    # EXPERIMENTS.md §Perf iter 2). Indivisible head counts replicate heads.
+    # REPRO_SHARD_HD=1 restores the pre-fix rule (baseline bookkeeping only).
+    shard_hd = os.environ.get("REPRO_SHARD_HD") == "1"
+    if name in ("wq", "wk", "wv") and len(shape) == 3:
+        dmod, h, hd = shape
+        if h % _axsize(mesh, "model") == 0:
+            return P(d(mesh, "data", dmod), "model", None)
+        return P(d(mesh, "data", dmod), None,
+                 d(mesh, "model", hd) if shard_hd else None)
+    if name == "wo" and len(shape) == 3:          # (H, hd, D) attention out
+        h, hd, dmod = shape
+        if h % _axsize(mesh, "model") == 0:
+            return P("model", None, d(mesh, "data", dmod))
+        return P(None, d(mesh, "model", hd) if shard_hd else None,
+                 d(mesh, "data", dmod))
+    if name in ("bq", "bk", "bv"):
+        h, hd = shape
+        if h % _axsize(mesh, "model") == 0:
+            return P("model", None)
+        return P(None, d(mesh, "model", hd) if shard_hd else None)
+    if name in ("wi", "wg") and len(shape) == 2:  # mlp (D, F)
+        return P(d(mesh, "data", shape[0]), d(mesh, "model", shape[1]))
+    if name == "wo" and len(shape) == 2:          # mlp (F, D)
+        return P(d(mesh, "model", shape[0]), d(mesh, "data", shape[1]))
+    if name == "router":
+        return P(d(mesh, "data", shape[0]), None)
+    if name in ("wi", "wg") and len(shape) == 3:  # moe (E, D, F)
+        e_ax = d(mesh, "data", shape[0]) if expert_parallel else None
+        return P(e_ax, None if expert_parallel else d(mesh, "data", shape[1]),
+                 d(mesh, "model", shape[2]))
+    if name == "wo" and len(shape) == 3:          # moe (E, F, D)
+        e_ax = d(mesh, "data", shape[0]) if expert_parallel else None
+        return P(e_ax, d(mesh, "model", shape[1]),
+                 None if expert_parallel else d(mesh, "data", shape[2]))
+    if name == "in_proj":                         # ssm (D, ·)
+        return P(d(mesh, "data", shape[0]), d(mesh, "model", shape[1]))
+    if name == "out_proj":                        # ssm (d_inner, D)
+        return P(d(mesh, "model", shape[0]), d(mesh, "data", shape[1]))
+    if name == "conv_w":
+        return P(None, d(mesh, "model", shape[1]))
+    if name in ("conv_b", "norm_scale") and len(shape) == 1:
+        return P(d(mesh, "model", shape[0]))
+    if name in ("A_log", "D", "dt_bias"):
+        return P(d(mesh, "model", shape[0]))
+    if name == "w" and len(shape) == 2:           # vision projector
+        return P(None, d(mesh, "data", shape[1]))
+    # norms, small biases, scalars
+    return P(*([None] * len(shape)))
+
+
+def _path_names(path):
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(f"[{k.idx}]")
+        else:
+            names.append(str(k))
+    return names
+
+
+def param_specs(cfg, mesh: Mesh, expert_parallel=False):
+    """Tree of PartitionSpec matching init_params(cfg) structure."""
+    abstract = M.abstract_params(cfg)
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        stacked = "layers" in names
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        spec = _rule(mesh, names, shape, expert_parallel)
+        if stacked:
+            spec = P(*((None,) + tuple(spec)))
+        return spec
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, abstract)
+
+
+# ---------------------------------------------------------------------------
+# inputs / caches
+# ---------------------------------------------------------------------------
+
+
+def _dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _dp_size(mesh: Mesh):
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= _axsize(mesh, a)
+    return n
+
+
+def batch_specs(cfg, mesh: Mesh, batch_tree):
+    """Specs for a train/prefill batch dict (shard batch dim over DP axes)."""
+    dp = _dp_axes(mesh)
+
+    def spec(path, leaf):
+        b = leaf.shape[0]
+        lead = dp if b % _dp_size(mesh) == 0 else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def cache_specs(cfg, mesh: Mesh, cache_tree):
+    """Decode-cache specs: batch over DP axes; if batch=1 (long-context),
+    shard the KV seq axis over `data`; head/state dims over `model`."""
+    dp = _dp_axes(mesh)
+    msz = _axsize(mesh, "model")
+
+    def spec(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shp = leaf.shape                      # (ns, B, ...)
+        b = shp[1]
+        bspec = dp if b % _dp_size(mesh) == 0 else None
+        if name in ("k", "v", "xk", "xv"):
+            ns, _, s, kh, hd = shp
+            sspec = None
+            if bspec is None and s % _axsize(mesh, "data") == 0:
+                sspec = "data"
+            # same rule as weights: never shard hd (contracted in attention)
+            if kh % msz == 0:
+                hspec = ("model", None)
+            elif os.environ.get("REPRO_SHARD_HD") == "1":
+                hspec = (None, "model" if hd % msz == 0 else None)
+            else:
+                hspec = (None, None)
+            return P(None, bspec, sspec, hspec[0], hspec[1])
+        if name == "conv":
+            ch = shp[3]
+            return P(None, bspec, None, "model" if ch % msz == 0 else None)
+        if name == "ssm":
+            h = shp[2]
+            return P(None, bspec, "model" if h % msz == 0 else None, None,
+                     None)
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def decode_arg_specs(cfg, mesh: Mesh, decode_tree):
+    """Specs for {"cache":..., "tokens": (B,1), "pos": (B,)}."""
+    dp = _dp_axes(mesh)
+    cache = cache_specs(cfg, mesh, decode_tree["cache"])
+    b = decode_tree["tokens"].shape[0]
+    bspec = dp if b % _dp_size(mesh) == 0 else None
+    return {"cache": cache,
+            "tokens": P(bspec, None),
+            "pos": P(bspec)}
+
+
+def train_state_specs(cfg, mesh: Mesh, expert_parallel=False):
+    from repro.train.steps import TrainState
+    ps = param_specs(cfg, mesh, expert_parallel)
+    return TrainState(params=ps, opt={"m": ps, "v": ps, "step": P()})
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

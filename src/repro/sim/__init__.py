@@ -1,0 +1,6 @@
+from repro.sim.hardware import FLYCUBE, SMALLSAT_SBAND, HardwareProfile, PowerModes
+
+# NOTE: repro.sim.flystack is imported lazily (import the submodule directly)
+# to avoid a circular import with repro.core.spaceify.
+
+__all__ = ["FLYCUBE", "SMALLSAT_SBAND", "HardwareProfile", "PowerModes"]

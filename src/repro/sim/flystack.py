@@ -1,0 +1,108 @@
+"""FLySTacK (paper §4): constellation-design & hardware-aware FL testbed.
+
+Combines deterministic orbital access windows (repro.orbit, standing in for
+STK) with the space-ified FL suite (repro.core, standing in for Flower) over
+synthetic FEMNIST / CIFAR-10 / EuroSAT federated datasets, under explicit
+hardware profiles (power + data rate, repro.sim.hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.autoflsat import AutoFLSat
+from repro.core.contact_plan import ContactPlan, build_contact_plan
+from repro.core.spaceify import ALGORITHMS, FLConfig, RoundRecord
+from repro.data.synthetic import make_federated_dataset
+from repro.sim.hardware import FLYCUBE, HardwareProfile
+
+
+@dataclasses.dataclass
+class SimConfig:
+    algorithm: str = "fedavg"            # key in ALGORITHMS or "autoflsat"
+    n_clusters: int = 2
+    sats_per_cluster: int = 5
+    n_ground_stations: int = 3
+    dataset: str = "femnist"
+    model: str = "cnn"
+    horizon_days: float = 3.0
+    dt_s: float = 30.0
+    n_per_client: int = 64
+    alpha: float = 0.5                   # dirichlet non-IID skew
+    fl: FLConfig = dataclasses.field(default_factory=FLConfig)
+    epochs_mode: str = "fixed"           # autoflsat: "fixed" | "auto"
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class SimResult:
+    config: SimConfig
+    records: List[RoundRecord]
+
+    # -- paper metrics ---------------------------------------------------
+    def final_accuracy(self) -> float:
+        return self.records[-1].accuracy if self.records else 0.0
+
+    def best_accuracy(self) -> float:
+        return max((r.accuracy for r in self.records), default=0.0)
+
+    def mean_round_duration_h(self) -> float:
+        return float(np.mean([r.duration_s for r in self.records]) / 3600) \
+            if self.records else float("nan")
+
+    def mean_idle_h(self) -> float:
+        return float(np.mean([r.idle_s for r in self.records]) / 3600) \
+            if self.records else float("nan")
+
+    def total_training_time_h(self) -> float:
+        return (self.records[-1].t_end - self.records[0].t_start) / 3600 \
+            if self.records else float("nan")
+
+    def time_to_accuracy_h(self, target: float) -> Optional[float]:
+        for r in self.records:
+            if r.accuracy >= target:
+                return (r.t_end - self.records[0].t_start) / 3600
+        return None
+
+    def summary(self) -> dict:
+        return {
+            "algorithm": self.config.algorithm,
+            "clusters": self.config.n_clusters,
+            "sats_per_cluster": self.config.sats_per_cluster,
+            "ground_stations": self.config.n_ground_stations,
+            "rounds": len(self.records),
+            "final_acc": round(self.final_accuracy(), 4),
+            "best_acc": round(self.best_accuracy(), 4),
+            "mean_round_h": round(self.mean_round_duration_h(), 4),
+            "mean_idle_h": round(self.mean_idle_h(), 4),
+            "total_h": round(self.total_training_time_h(), 3),
+        }
+
+
+class FLySTacK:
+    def __init__(self, cfg: SimConfig, hw: HardwareProfile = FLYCUBE,
+                 plan: Optional[ContactPlan] = None):
+        self.cfg = cfg
+        self.hw = hw
+        needs_isl = cfg.algorithm == "autoflsat"
+        self.plan = plan if plan is not None else build_contact_plan(
+            cfg.n_clusters, cfg.sats_per_cluster, cfg.n_ground_stations,
+            horizon_s=cfg.horizon_days * 86_400, dt_s=cfg.dt_s,
+            with_isl_pairs=needs_isl)
+        self.dataset = make_federated_dataset(
+            cfg.dataset, n_clients=cfg.n_clusters * cfg.sats_per_cluster,
+            n_per_client=cfg.n_per_client, alpha=cfg.alpha, seed=cfg.seed)
+
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        if cfg.algorithm == "autoflsat":
+            algo = AutoFLSat(self.plan, self.hw, self.dataset, cfg.fl,
+                             epochs_mode=cfg.epochs_mode)
+        else:
+            cls, overrides = ALGORITHMS[cfg.algorithm]
+            fl = dataclasses.replace(cfg.fl, **overrides)
+            algo = cls(self.plan, self.hw, self.dataset, fl)
+        records = algo.run()
+        return SimResult(config=cfg, records=records)

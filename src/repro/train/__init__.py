@@ -1,0 +1,10 @@
+from repro.train.steps import (
+    TrainState,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+__all__ = ["TrainState", "init_train_state", "make_decode_step",
+           "make_prefill_step", "make_train_step"]

@@ -1,0 +1,68 @@
+"""jit-able train / prefill / decode steps shared by trainer, dry-run, tests.
+
+``train_step`` is the full production step: loss -> grads -> AdamW update.
+The loss masks padding (label < 0), adds the MoE load-balance aux loss, and
+computes cross-entropy in fp32 off bf16 matmuls (preferred_element_type).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim.optimizers import AdamWConfig, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) f32; labels (B,S) int32, <0 = masked."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_safe[..., None],
+                               axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, cfg, batch):
+    logits, aux = M.apply_train(params, cfg, batch)
+    ce = cross_entropy(logits, batch["labels"])
+    aux_w = cfg.moe.aux_loss_weight if cfg.moe is not None else 0.0
+    return ce + aux_w * aux, {"ce": ce, "aux": aux}
+
+
+def init_train_state(key, cfg):
+    params = M.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig = AdamWConfig()):
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        (loss, parts), grads = jax.value_and_grad(
+            partial(loss_fn, cfg=cfg, batch=batch), has_aux=True)(state.params)
+        newp, newopt, gnorm = adamw_update(opt_cfg, state.params, grads,
+                                           state.opt)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm}
+        return TrainState(params=newp, opt=newopt), metrics
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos)
+    return decode_step

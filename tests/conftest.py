@@ -1,0 +1,19 @@
+import dataclasses
+
+import jax
+import pytest
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py forces 512.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def f32(cfg):
+    """Smoke configs run in float32 on CPU for exact-comparison numerics."""
+    return dataclasses.replace(cfg, compute_dtype="float32")

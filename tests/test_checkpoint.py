@@ -1,0 +1,45 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_pytree, save_pytree
+from repro.checkpoint.checkpoint import load_meta
+from repro.configs import get_smoke_config
+from repro.train import steps as ST
+
+
+@pytest.fixture(scope="module")
+def state():
+    cfg = dataclasses.replace(get_smoke_config("qwen3-14b"),
+                              compute_dtype="float32", n_layers=2,
+                              d_model=64, n_heads=2, n_kv_heads=2,
+                              head_dim=32, d_ff=128, vocab=128)
+    return ST.init_train_state(jax.random.PRNGKey(0), cfg)
+
+
+def test_roundtrip_trainstate(tmp_path, state):
+    p = tmp_path / "ckpt.npz"
+    save_pytree(p, state, extra_meta={"step": 7})
+    back = restore_pytree(p, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(load_meta(p)["step"]) == 7
+
+
+def test_shape_mismatch_rejected(tmp_path, state):
+    p = tmp_path / "ckpt.npz"
+    save_pytree(p, {"w": jnp.zeros((3, 3))})
+    with pytest.raises(ValueError):
+        restore_pytree(p, jax.eval_shape(lambda: {"w": jnp.zeros((4, 3))}))
+
+
+def test_missing_leaf_rejected(tmp_path):
+    p = tmp_path / "ckpt.npz"
+    save_pytree(p, {"a": jnp.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_pytree(p, jax.eval_shape(
+            lambda: {"a": jnp.zeros((2,)), "b": jnp.zeros((2,))}))

@@ -1,0 +1,160 @@
+"""Unit tests for the paper-core FL machinery (aggregation, quantization,
+client training, contact plans, space-ified algorithms)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import inplace_aggregate, weighted_average
+from repro.core.client import local_sgd
+from repro.core.contact_plan import build_contact_plan
+from repro.core.quantize import (dequantize_pytree, quantize_pytree,
+                                 quantized_bytes, roundtrip_error)
+from repro.models.small import MODELS, accuracy
+from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.visibility import windows_from_bool
+
+
+# ---------------------------------------------------------------------------
+# aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_weighted_average_matches_manual():
+    k = jax.random.PRNGKey(0)
+    stacked = {"w": jax.random.normal(k, (3, 4, 5))}
+    w = np.array([1.0, 2.0, 3.0])
+    out = weighted_average(stacked, w)
+    manual = (stacked["w"] * (w / w.sum())[:, None, None]).sum(0)
+    assert jnp.allclose(out["w"], manual, atol=1e-6)
+
+
+def test_inplace_aggregate_equals_weighted_average():
+    k = jax.random.PRNGKey(1)
+    leaves = jax.random.normal(k, (4, 6))
+    stacked = {"w": leaves}
+    w = [0.5, 1.5, 2.0, 1.0]
+    a = weighted_average(stacked, np.array(w))
+    b = inplace_aggregate(({"w": leaves[i]}, w[i]) for i in range(4))
+    assert jnp.allclose(a["w"], b["w"], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantization (QuAFL) — property-based
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.integers(min_value=4, max_value=16),
+       seed=st.integers(min_value=0, max_value=100))
+def test_quantize_roundtrip_error_bounded(bits, seed):
+    x = {"a": jax.random.normal(jax.random.PRNGKey(seed), (32, 8))}
+    err = roundtrip_error(x, bits)
+    # uniform quantization error ~ scale/2 per element
+    assert err <= 2.0 ** (1 - bits) * 4
+    q, s = quantize_pytree(x, bits)
+    deq = dequantize_pytree(q, s)
+    assert jnp.max(jnp.abs(deq["a"] - x["a"])) <= float(s["a"]) * 0.5 + 1e-6
+
+
+def test_quantize_monotone_in_bits():
+    x = {"a": jax.random.normal(jax.random.PRNGKey(3), (64, 16))}
+    errs = [roundtrip_error(x, b) for b in (4, 8, 10, 16)]
+    assert errs == sorted(errs, reverse=True)
+
+
+def test_quantized_bytes_accounting():
+    x = {"a": jnp.zeros((100,)), "b": jnp.zeros((28,))}
+    assert quantized_bytes(x, 8) == 128 * 1 + 2 * 4
+    assert quantized_bytes(x, 10) == 128 * 10 / 8 + 2 * 4
+
+
+# ---------------------------------------------------------------------------
+# local training
+# ---------------------------------------------------------------------------
+
+
+def test_local_sgd_reduces_loss():
+    init_fn, apply_fn = MODELS["mlp"]
+    k = jax.random.PRNGKey(0)
+    params = init_fn(k, (8, 8, 1), 4)
+    x = jax.random.normal(k, (64, 8, 8, 1))
+    y = (x.mean((1, 2, 3)) > 0).astype(jnp.int32) * 3
+    acc0 = accuracy(apply_fn, params, x, y)
+    trained = local_sgd("mlp", params, x, y, k, 10, 16, 0.1)
+    assert accuracy(apply_fn, trained, x, y) > acc0
+
+
+def test_local_sgd_prox_limits_drift():
+    init_fn, _ = MODELS["mlp"]
+    k = jax.random.PRNGKey(0)
+    params = init_fn(k, (8, 8, 1), 4)
+    x = jax.random.normal(k, (64, 8, 8, 1))
+    y = (x.mean((1, 2, 3)) > 0).astype(jnp.int32)
+
+    def drift(p):
+        return sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(
+            jax.tree_util.tree_leaves(p), jax.tree_util.tree_leaves(params)))
+
+    free = local_sgd("mlp", params, x, y, k, 10, 16, 0.1)
+    prox = local_sgd("mlp", params, x, y, k, 10, 16, 0.1, mu=1.0, mu_on=True,
+                     global_params=params)
+    assert drift(prox) < drift(free)
+
+
+# ---------------------------------------------------------------------------
+# orbits / contact plans
+# ---------------------------------------------------------------------------
+
+
+def test_walker_star_element_spacing():
+    c = WalkerStar(4, 5)
+    raan, phase, cluster = satellite_elements(c)
+    assert raan.shape == (20,)
+    assert np.allclose(np.unique(raan), np.pi * np.arange(4) / 4)
+    assert (np.bincount(cluster) == 5).all()
+
+
+def test_orbit_period_500km():
+    c = WalkerStar(1, 1)
+    assert 5640 < c.period_s < 5720        # ~94.6 min LEO period
+
+
+def test_windows_from_bool():
+    t = np.arange(10.0)
+    v = np.array([0, 1, 1, 0, 0, 1, 1, 1, 0, 1], bool)
+    w = windows_from_bool(v, t)
+    assert w == [(1.0, 3.0), (5.0, 8.0), (9.0, 9.0)]
+
+
+@pytest.fixture(scope="module")
+def small_plan():
+    return build_contact_plan(2, 3, 2, horizon_s=0.5 * 86400, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+def test_contact_plan_has_windows(small_plan):
+    n_with = sum(1 for w in small_plan.sat_windows if w)
+    assert n_with >= 5            # polar orbits + 2 GS: most sats get passes
+
+
+def test_next_contact_monotone(small_plan):
+    w0 = small_plan.next_contact(0, 0.0)
+    assert w0 is not None
+    w1 = small_plan.next_contact(0, w0[1] + 1.0)
+    assert w1 is None or w1[0] >= w0[0]
+
+
+def test_revisit_time_in_paper_range(small_plan):
+    """Paper: LEO@500km revisit to a GS ranges ~30 min to 9+ h."""
+    wins = small_plan.sat_windows[0]
+    if len(wins) >= 2:
+        gaps = [wins[i + 1][0] - wins[i][1] for i in range(len(wins) - 1)]
+        assert min(gaps) > 60.0
+        assert max(gaps) < 86400.0
+
+
+def test_interplane_pair_windows_exist(small_plan):
+    assert (0, 1) in small_plan.pair_windows
+    assert len(small_plan.pair_windows[(0, 1)]) >= 1

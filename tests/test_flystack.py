@@ -1,0 +1,77 @@
+"""FLySTacK behaviour tests: the paper's §5.1 qualitative findings must hold
+in the simulator (scheduling shortens rounds, FedBuff kills idle time,
+AutoFLSat beats GS-bound methods on round duration, more ground stations
+help then plateau)."""
+import dataclasses
+
+import pytest
+
+from repro.core.contact_plan import build_contact_plan
+from repro.core.spaceify import FLConfig
+from repro.sim.flystack import FLySTacK, SimConfig
+from repro.sim.hardware import SMALLSAT_SBAND
+
+
+def _run(algorithm, n_gs=3, clusters=2, spc=5, rounds=6, plan=None, **kw):
+    cfg = SimConfig(algorithm=algorithm, n_clusters=clusters,
+                    sats_per_cluster=spc, n_ground_stations=n_gs,
+                    horizon_days=2.0, dataset="femnist", n_per_client=32,
+                    fl=FLConfig(clients_per_round=5, epochs=2,
+                                max_rounds=rounds, lr=0.05,
+                                max_local_epochs=10, quant_bits=10), **kw)
+    return FLySTacK(cfg, hw=SMALLSAT_SBAND, plan=plan).run()
+
+
+@pytest.fixture(scope="module")
+def shared_plan():
+    return build_contact_plan(2, 5, 3, horizon_s=2 * 86400, dt_s=30.0,
+                              with_isl_pairs=True)
+
+
+def test_fedavg_converges(shared_plan):
+    res = _run("fedavg", plan=shared_plan, rounds=8)
+    assert len(res.records) >= 4
+    assert res.best_accuracy() > 0.5
+
+
+def test_scheduling_reduces_round_duration(shared_plan):
+    base = _run("fedavg", plan=shared_plan)
+    sch = _run("fedavg_sch", plan=shared_plan)
+    assert sch.mean_round_duration_h() <= base.mean_round_duration_h() + 1e-9
+
+
+def test_fedbuff_has_near_zero_idle(shared_plan):
+    base = _run("fedavg", plan=shared_plan)
+    buff = _run("fedbuff", plan=shared_plan)
+    assert buff.mean_idle_h() < 0.25 * base.mean_idle_h()
+
+
+def test_autoflsat_beats_gs_bound_round_duration(shared_plan):
+    base = _run("fedavg_sch", plan=shared_plan)
+    auto = _run("autoflsat", plan=shared_plan)
+    assert auto.mean_round_duration_h() < base.mean_round_duration_h()
+    assert auto.best_accuracy() > 0.5
+
+
+def test_fedprox_trains_variable_epochs(shared_plan):
+    res = _run("fedprox", plan=shared_plan)
+    eps = [r.epochs for r in res.records]
+    assert all(e >= 1 for e in eps)
+
+
+def test_more_ground_stations_shorten_rounds():
+    one = _run("fedavg", n_gs=1, rounds=3)
+    five = _run("fedavg", n_gs=5, rounds=3)
+    assert five.mean_round_duration_h() <= one.mean_round_duration_h()
+
+
+def test_quantization_reduces_tx_time():
+    from repro.core.spaceify import FedAvgSat, _model_tx_bytes
+    cfg_full = FLConfig(quant_bits=0)
+    cfg_q = FLConfig(quant_bits=8)
+    plan = build_contact_plan(1, 2, 1, horizon_s=0.2 * 86400, dt_s=60.0)
+    from repro.data.synthetic import make_federated_dataset
+    ds = make_federated_dataset("femnist", 2, 16)
+    a = FedAvgSat(plan, SMALLSAT_SBAND, ds, cfg_full)
+    b = FedAvgSat(plan, SMALLSAT_SBAND, ds, cfg_q)
+    assert b.tx_bytes < 0.3 * a.tx_bytes

@@ -1,0 +1,109 @@
+"""Hierarchical (AutoFLSat-on-mesh) trainer semantics.
+
+Key invariants:
+  * identical batches + identical init across clusters => HFL local step
+    equals the plain train step exactly (clusters never diverge);
+  * different batches => clusters diverge, cluster_sync makes them equal
+    again, and the synced params equal the cluster mean;
+  * quantized sync approaches the exact mean as bits grow;
+  * H-step local training with periodic sync converges on synthetic LM data.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import hierarchy as H
+from repro.data.tokens import synthetic_lm_batches
+from repro.launch import specs
+from repro.train import steps as ST
+
+CFG = dataclasses.replace(get_smoke_config("qwen3-14b"),
+                          compute_dtype="float32", vocab=256,
+                          n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                          head_dim=32, d_ff=256)
+NC = 2
+
+
+def _batches(n, key=0):
+    return list(synthetic_lm_batches(CFG.vocab, batch=4, seq=32,
+                                     n_batches=n, seed=key))
+
+
+def _stack(batches):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+
+def test_identical_batches_keep_clusters_identical():
+    state = H.init_hfl_state(jax.random.PRNGKey(0), CFG, NC)
+    local = jax.jit(H.make_hfl_local_step(CFG))
+    b = _batches(1)[0]
+    hfl_batch = _stack([b, b])
+    state, metrics = local(state, hfl_batch)
+    p = state.params["tok_embed"]
+    assert jnp.allclose(p[0], p[1], atol=1e-6)
+    # equals plain single-cluster step
+    plain = ST.init_train_state(jax.random.PRNGKey(0), CFG)
+    plain2, m2 = jax.jit(ST.make_train_step(CFG))(plain, b)
+    assert jnp.allclose(plain2.params["tok_embed"], p[0], atol=1e-5)
+    assert jnp.allclose(metrics["loss"][0], m2["loss"], atol=1e-5)
+
+
+def test_divergence_and_sync():
+    state = H.init_hfl_state(jax.random.PRNGKey(0), CFG, NC)
+    local = jax.jit(H.make_hfl_local_step(CFG))
+    sync = jax.jit(H.make_cluster_sync(CFG))
+    b1, b2 = _batches(2)
+    state, _ = local(state, _stack([b1, b2]))
+    p = state.params["tok_embed"]
+    assert not jnp.allclose(p[0], p[1], atol=1e-6)     # diverged
+    mean = 0.5 * (p[0] + p[1])
+    state = sync(state)
+    p = state.params["tok_embed"]
+    assert jnp.allclose(p[0], p[1], atol=1e-6)
+    assert jnp.allclose(p[0], mean, atol=1e-6)
+
+
+@pytest.mark.parametrize("bits,tol", [(8, 2e-2), (12, 2e-3)])
+def test_quantized_sync_error_shrinks_with_bits(bits, tol):
+    state = H.init_hfl_state(jax.random.PRNGKey(0), CFG, NC)
+    local = jax.jit(H.make_hfl_local_step(CFG))
+    b1, b2 = _batches(2)
+    state, _ = local(state, _stack([b1, b2]))
+    exact = H.make_cluster_sync(CFG)(state)
+    quant = H.make_cluster_sync(CFG, quant_bits=bits)(state)
+    for a, b in zip(jax.tree_util.tree_leaves(exact.params),
+                    jax.tree_util.tree_leaves(quant.params)):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-9
+        assert float(jnp.max(jnp.abs(a - b))) / scale < tol
+
+
+def test_hfl_training_converges():
+    from repro.optim.optimizers import AdamWConfig
+    state = H.init_hfl_state(jax.random.PRNGKey(1), CFG, NC)
+    local = jax.jit(H.make_hfl_local_step(
+        CFG, AdamWConfig(lr=3e-3, warmup_steps=1)))
+    sync = jax.jit(H.make_cluster_sync(CFG))
+    losses = []
+    hh = 3
+    bs = _batches(12, key=5)
+    for i in range(12):
+        # non-IID: each cluster sees its own stream
+        hfl_batch = _stack([bs[i], bs[(i + 7) % 12]])
+        state, m = local(state, hfl_batch)
+        losses.append(float(m["loss"].mean()))
+        if (i + 1) % hh == 0:
+            state = sync(state)
+    assert losses[-1] < losses[0]
+
+
+def test_sync_interval_from_orbits():
+    from repro.core.contact_plan import build_contact_plan
+    from repro.sim.hardware import SMALLSAT_SBAND
+    plan = build_contact_plan(2, 3, 1, horizon_s=0.5 * 86400, dt_s=60.0,
+                              with_isl_pairs=True)
+    h = H.sync_interval_from_orbits(plan, SMALLSAT_SBAND,
+                                    model_bytes=1e6, step_time_s=1.0)
+    assert 1 <= h <= 500

@@ -1,0 +1,40 @@
+"""End-to-end: model forward with Pallas impls == naive/jnp impls."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import InputShape, get_smoke_config
+from repro.launch import specs
+from repro.models import model as M
+
+SHAPE = InputShape("t", 64, 2, "train")
+
+
+def _logits(cfg):
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batch = specs.concrete_inputs(cfg, SHAPE, key=jax.random.PRNGKey(2))["batch"]
+    logits, _ = M.apply_train(params, cfg, batch)
+    return logits
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "qwen3-14b"])
+def test_flash_attention_impl_matches_naive(arch):
+    base = dataclasses.replace(get_smoke_config(arch),
+                               compute_dtype="float32")
+    flash = dataclasses.replace(base, attn_impl="flash")
+    np.testing.assert_allclose(_logits(base), _logits(flash),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "jamba-v0.1-52b"])
+def test_pallas_ssm_impl_matches_jnp(arch):
+    base = dataclasses.replace(get_smoke_config(arch),
+                               compute_dtype="float32")
+    base = dataclasses.replace(
+        base, ssm=dataclasses.replace(base.ssm, chunk=16))
+    pallas = dataclasses.replace(base, ssm_impl="pallas")
+    np.testing.assert_allclose(_logits(base), _logits(pallas),
+                               rtol=3e-4, atol=3e-4)

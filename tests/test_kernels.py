@@ -1,0 +1,141 @@
+"""Per-kernel allclose vs the ref.py jnp oracles, swept over shapes/dtypes
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.ssm import ssd_chunked
+
+# ---------------------------------------------------------------------------
+# quant_agg
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [7, 2048, 2049, 100_003])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_quant_agg_shapes(n, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n))
+    acc = jax.random.normal(k1, (n,), dtype)
+    q = jax.random.randint(k2, (n,), -127, 127, jnp.int32)
+    out = ops.quantized_weighted_accumulate(acc, q, 0.01, 0.25,
+                                            interpret=True)
+    want = ref.quant_agg_ref(acc, q, 0.01, 0.25)
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 5000), scale=st.floats(1e-4, 1.0),
+       w=st.floats(0.0, 2.0), seed=st.integers(0, 99))
+def test_quant_agg_property(n, scale, w, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    acc = jax.random.normal(k1, (n,))
+    q = jax.random.randint(k2, (n,), -511, 511, jnp.int32)
+    out = ops.quantized_weighted_accumulate(acc, q, scale, w, interpret=True)
+    want = ref.quant_agg_ref(acc, q, scale, w)
+    np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+
+def test_quantized_inplace_aggregate_matches_mean():
+    from repro.core.quantize import quantize_pytree, dequantize_pytree
+    key = jax.random.PRNGKey(0)
+    models = [{"w": jax.random.normal(jax.random.fold_in(key, i), (300,))}
+              for i in range(3)]
+    qs, ss = zip(*(quantize_pytree(m, 8) for m in models))
+    agg = ops.quantized_inplace_aggregate(list(qs), list(ss), [1.0, 1.0, 1.0],
+                                          interpret=True)
+    deq = [dequantize_pytree(q, s) for q, s in zip(qs, ss)]
+    want = sum(d["w"] for d in deq) / 3
+    np.testing.assert_allclose(agg["w"], want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,l,h,p,n,g,chunk", [
+    (1, 64, 2, 16, 16, 1, 16),
+    (2, 128, 4, 32, 32, 2, 32),
+    (1, 96, 2, 64, 128, 1, 32),
+])
+def test_ssd_kernel_matches_pure_jnp(b, l, h, p, n, g, chunk):
+    keys = jax.random.split(jax.random.PRNGKey(l + h), 5)
+    x = jax.random.normal(keys[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    B = jax.random.normal(keys[3], (b, l, g, n)) * 0.5
+    C = jax.random.normal(keys[4], (b, l, g, n)) * 0.5
+    y_want, st_want = ssd_chunked(x, dt, A, B, C, chunk)
+    y_got, st_got = ops.ssd_chunked_kernel(x, dt, A, B, C, chunk,
+                                           interpret=True)
+    np.testing.assert_allclose(y_got, y_want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_got, st_want, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_with_initial_state():
+    b, l, h, p, n, chunk = 1, 64, 2, 16, 16, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 6)
+    x = jax.random.normal(keys[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(keys[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(keys[2], (h,)) * 0.3)
+    B = jax.random.normal(keys[3], (b, l, 1, n)) * 0.5
+    C = jax.random.normal(keys[4], (b, l, 1, n)) * 0.5
+    st0 = jax.random.normal(keys[5], (b, h, p, n)) * 0.1
+    y_want, f_want = ssd_chunked(x, dt, A, B, C, chunk, init_state=st0)
+    y_got, f_got = ops.ssd_chunked_kernel(x, dt, A, B, C, chunk,
+                                          init_state=st0, interpret=True)
+    np.testing.assert_allclose(y_got, y_want, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(f_got, f_want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# swa_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("l,window,bq,bk", [
+    (128, 0, 32, 32),        # full causal
+    (128, 48, 32, 32),       # sliding window
+    (256, 64, 64, 64),
+    (128, 16, 32, 32),       # window smaller than block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_matches_ref(l, window, bq, bk, dtype):
+    b, h, kh, hd = 2, 4, 2, 32
+    keys = jax.random.split(jax.random.PRNGKey(l + window), 3)
+    q = jax.random.normal(keys[0], (b, l, h, hd), dtype)
+    k = jax.random.normal(keys[1], (b, l, kh, hd), dtype)
+    v = jax.random.normal(keys[2], (b, l, kh, hd), dtype)
+    got = ops.swa_flash_attention(q, k, v, window=window, bq=bq, bk=bk,
+                                  interpret=True)
+    rep = h // kh
+    kf = jnp.repeat(k, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+    vf = jnp.repeat(v, rep, 2).transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, l, hd)
+    want = ref.swa_attention_ref(qf, kf, vf, window).reshape(
+        b, h, l, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), rtol=tol, atol=tol)
+
+
+def test_swa_matches_model_attention_layer():
+    """Kernel output must equal the model's naive attention path (mixtral)."""
+    import dataclasses
+    from repro.configs import get_smoke_config
+    from repro.models.layers import apply_attention_seq, init_attention
+    cfg = dataclasses.replace(get_smoke_config("mixtral-8x22b"),
+                              compute_dtype="float32", sliding_window=48)
+    p = init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model)) * 0.1
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    want, (k, v) = apply_attention_seq(p, x, cfg, pos)
+    from repro.models.layers import _qkv, cx
+    q, kk, vv = _qkv(p, x, x, cfg, pos, pos)
+    got = ops.swa_flash_attention(q, kk, vv, window=cfg.sliding_window,
+                                  bq=32, bk=32, interpret=True)
+    got = jnp.einsum("bqhk,hkd->bqd", got, p["wo"])
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

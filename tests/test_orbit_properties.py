@@ -1,0 +1,58 @@
+"""Property-based tests on orbital-mechanics invariants (hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.orbit.constellation import (R_EARTH, WalkerStar,
+                                       satellite_elements)
+from repro.orbit.propagate import ecef_positions, eci_positions
+
+
+@settings(max_examples=20, deadline=None)
+@given(nc=st.integers(1, 6), spc=st.integers(1, 6),
+       t=st.floats(0.0, 86400.0))
+def test_circular_orbit_radius_invariant(nc, spc, t):
+    c = WalkerStar(nc, spc)
+    raan, phase, _ = satellite_elements(c)
+    pos = eci_positions(c, jnp.asarray(raan), jnp.asarray(phase),
+                        jnp.radians(90.0), jnp.asarray([t]))
+    r = jnp.linalg.norm(pos, axis=-1)
+    np.testing.assert_allclose(np.asarray(r), c.radius_m, rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(t=st.floats(0.0, 86400.0))
+def test_earth_rotation_preserves_z_and_radius(t):
+    c = WalkerStar(2, 3)
+    raan, phase, _ = satellite_elements(c)
+    ts = jnp.asarray([t])
+    eci = eci_positions(c, jnp.asarray(raan), jnp.asarray(phase),
+                        jnp.radians(90.0), ts)
+    ecef = ecef_positions(c, jnp.asarray(raan), jnp.asarray(phase),
+                          jnp.radians(90.0), ts)
+    np.testing.assert_allclose(np.asarray(eci[..., 2]),
+                               np.asarray(ecef[..., 2]), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(eci, axis=-1)),
+                               np.asarray(jnp.linalg.norm(ecef, axis=-1)),
+                               rtol=1e-6)
+
+
+def test_period_returns_to_start():
+    c = WalkerStar(1, 1)
+    raan, phase, _ = satellite_elements(c)
+    ts = jnp.asarray([0.0, c.period_s])
+    pos = eci_positions(c, jnp.asarray(raan), jnp.asarray(phase),
+                        jnp.radians(90.0), ts)
+    np.testing.assert_allclose(np.asarray(pos[0]), np.asarray(pos[1]),
+                               atol=200.0)  # metres; f32 phase accumulation
+
+
+def test_polar_orbit_covers_both_poles():
+    c = WalkerStar(1, 1)
+    raan, phase, _ = satellite_elements(c)
+    ts = jnp.linspace(0.0, c.period_s, 200)
+    pos = eci_positions(c, jnp.asarray(raan), jnp.asarray(phase),
+                        jnp.radians(90.0), ts)
+    zmax = float(pos[..., 2].max())
+    zmin = float(pos[..., 2].min())
+    assert zmax > 0.99 * c.radius_m and zmin < -0.99 * c.radius_m

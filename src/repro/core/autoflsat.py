@@ -57,15 +57,10 @@ class AutoFLSat(SpaceifiedFL):
             e = self.cfg.epochs
             t_done = t + self.hw.train_time(e)
             return InterSLSchedule(t, t_done, e, [])
-        t_cur = t
-        passes = []
-        for ci in range(C):
-            for cj in range(ci + 1, C):
-                done = self.plan.transmit_over_pair(ci, cj, t_cur, tx)
-                if done is None:
-                    return None
-                passes.append((ci, cj, t_cur))
-                t_cur = done
+        chained = self.plan.chain_pair_transfers(t, tx)
+        if chained is None:
+            return None
+        t_cur, passes = chained
         if self.epochs_mode == "auto":
             # epochs from first & last comms record (Algorithm 2)
             e = max(1, int((t_cur - t) // self.hw.epoch_time_s))

@@ -1,0 +1,137 @@
+"""Reference scalar contact-plan implementations (the pre-vectorization
+linear scans), retained verbatim for golden parity tests and as the
+baseline the perf benchmark measures speedups against. Nothing in the
+runtime path imports this module.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+Window = Tuple[float, float, int]
+
+
+def next_contact_ref(sat_windows: List[List[Window]], k: int, t: float
+                     ) -> Optional[Window]:
+    """Linear scan: first window of sat k whose end is after t."""
+    for (s, e, g) in sat_windows[k]:
+        if e > t:
+            return (max(s, t), e, g)
+    return None
+
+
+def next_cluster_contact_ref(plan, k: int, t: float):
+    """Linear scan over k's cluster peers, ties prefer k itself."""
+    if not plan.intra_sl_enabled():
+        w = next_contact_ref(plan.sat_windows, k, t)
+        return None if w is None else (*w, k)
+    best = None
+    for p in plan.peers(k):
+        w = next_contact_ref(plan.sat_windows, p, t)
+        if w is None:
+            continue
+        key = (w[0], 0 if p == k else 1)
+        if best is None or key < (best[0], 0 if best[3] == k else 1):
+            best = (*w, p)
+    return best
+
+
+def next_pair_window_ref(pair_windows, ci: int, cj: int, t: float,
+                         min_duration: float = 0.0):
+    key = (min(ci, cj), max(ci, cj))
+    for (s, e) in pair_windows.get(key, []):
+        if e > t and (e - max(s, t)) >= min_duration:
+            return (max(s, t), e)
+    return None
+
+
+def transmit_over_pair_ref(pair_windows, ci: int, cj: int, t: float,
+                           tx_seconds: float) -> Optional[float]:
+    """Window walk accumulating airtime across successive LOS passes."""
+    key = (min(ci, cj), max(ci, cj))
+    remaining = tx_seconds
+    for (s, e) in pair_windows.get(key, []):
+        if e <= t:
+            continue
+        start = max(s, t)
+        avail = e - start
+        if avail >= remaining:
+            return start + remaining
+        remaining -= avail
+    return None
+
+
+def windows_from_bool_ref(vis: np.ndarray, times: np.ndarray
+                         ) -> List[Tuple[float, float]]:
+    """Scalar 1-D window extraction (post-fix end semantics: a window ends
+    at its last visible sample plus the grid step)."""
+    vis = np.asarray(vis, bool)
+    times = np.asarray(times, float)
+    dt = float(times[1] - times[0]) if len(times) > 1 else 0.0
+    out = []
+    start = None
+    for i, v in enumerate(vis):
+        if v and start is None:
+            start = i
+        elif not v and start is not None:
+            out.append((float(times[start]), float(times[i - 1]) + dt))
+            start = None
+    if start is not None:
+        out.append((float(times[start]), float(times[-1]) + dt))
+    return out
+
+
+def access_windows_ref(vis: np.ndarray, times: np.ndarray
+                       ) -> List[List[Window]]:
+    """The original Python triple loop over (K, G) series."""
+    times = np.asarray(times)
+    out = []
+    for k in range(vis.shape[1]):
+        wins = []
+        for g in range(vis.shape[2]):
+            for (s, e) in windows_from_bool_ref(vis[:, k, g], times):
+                wins.append((s, e, g))
+        wins.sort()
+        out.append(wins)
+    return out
+
+
+def projected_return_ref(plan, hw, cfg, k: int, t: float, epochs: float,
+                         t_up: float, t_down: float):
+    """The original per-satellite scalar projection used by selection."""
+    w = next_contact_ref(plan.sat_windows, k, t)
+    if w is None:
+        return None
+    recv_end = w[0] + t_up
+    train_end = recv_end + hw.train_time(epochs)
+    if cfg.selection == "intra_sl":
+        ret = next_cluster_contact_ref(plan, k, train_end)
+        if ret is None:
+            return None
+        return (w, recv_end, train_end, (ret[0], ret[1], ret[2]), ret[3])
+    ret = next_contact_ref(plan.sat_windows, k, train_end)
+    if ret is None:
+        return None
+    return (w, recv_end, train_end, ret, k)
+
+
+def select_clients_ref(plan, hw, cfg, t: float, t_up: float, t_down: float
+                       ) -> List[int]:
+    """The original K-sequential-scans client selection."""
+    K = plan.constellation.n_sats
+    cands = []
+    for k in range(K):
+        proj = projected_return_ref(plan, hw, cfg, k, t, cfg.epochs,
+                                    t_up, t_down)
+        if proj is None:
+            continue
+        w, recv_end, train_end, ret, relay = proj
+        if cfg.selection == "first_contact":
+            score = w[0]
+        else:
+            score = ret[0] + t_down
+        cands.append((score, k))
+    cands.sort()
+    m = min(cfg.clients_per_round, len(cands))
+    return [k for _, k in cands[:m]]

@@ -113,13 +113,10 @@ def sync_interval_from_orbits(plan, hw, model_bytes: float,
     if C <= 1:
         return 1
     tx = hw.tx_time(model_bytes, "isl") * 2.0
-    t_cur = t
-    for ci in range(C):
-        for cj in range(ci + 1, C):
-            done = plan.transmit_over_pair(ci, cj, t_cur, tx)
-            if done is None:
-                return max_h
-            t_cur = done
+    chained = plan.chain_pair_transfers(t, tx)
+    if chained is None:
+        return max_h
+    t_cur, _ = chained
     h = int((t_cur - t) // max(step_time_s, 1e-9))
     return int(min(max(h, 1), max_h))
 

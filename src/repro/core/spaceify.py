@@ -116,23 +116,39 @@ class SpaceifiedFL:
             return None
         return (w, recv_end, train_end, ret, k)
 
+    def _projected_returns(self, t: float, epochs: float):
+        """Batched ``_projected_return`` over every satellite at once:
+        one vectorized pass through the contact-plan arrays instead of K
+        sequential Python projections. Returns a dict of (K,) arrays."""
+        plan = self.plan
+        avail, end, gs, valid = plan.next_contacts(t)
+        recv_end = avail + self._t_up()
+        train_end = recv_end + self.hw.train_time(epochs)
+        if self.cfg.selection == "intra_sl":
+            r_avail, r_end, r_gs, relay, r_valid = \
+                plan.next_cluster_contacts(train_end)
+        else:
+            r_avail, r_end, r_gs, r_valid = plan.next_contacts(train_end)
+            relay = np.arange(len(r_avail))
+        return {"contact_avail": avail, "contact_end": end, "contact_gs": gs,
+                "recv_end": recv_end, "train_end": train_end,
+                "ret_avail": r_avail, "ret_end": r_end, "ret_gs": r_gs,
+                "relay": relay, "valid": valid & r_valid}
+
+    def _select_from_projections(self, proj) -> List[int]:
+        cfg = self.cfg
+        if cfg.selection == "first_contact":
+            score = proj["contact_avail"]          # first to make contact
+        else:                                      # scheduled / intra_sl
+            score = proj["ret_avail"] + self._t_down()  # contact+return
+        ks = np.nonzero(proj["valid"])[0]
+        order = np.lexsort((ks, score[ks]))        # score, then sat index
+        m = min(cfg.clients_per_round, len(ks))
+        return [int(k) for k in ks[order][:m]]
+
     def select_clients(self, t: float) -> List[int]:
-        cfg, plan = self.cfg, self.plan
-        K = plan.constellation.n_sats
-        cands = []
-        for k in range(K):
-            proj = self._projected_return(k, t, cfg.epochs)
-            if proj is None:
-                continue
-            w, recv_end, train_end, ret, relay = proj
-            if cfg.selection == "first_contact":
-                score = w[0]                       # first to make contact
-            else:                                  # scheduled / intra_sl
-                score = ret[0] + self._t_down()    # fastest contact+return
-            cands.append((score, k))
-        cands.sort()
-        m = min(cfg.clients_per_round, len(cands))
-        return [k for _, k in cands[:m]]
+        return self._select_from_projections(
+            self._projected_returns(t, self.cfg.epochs))
 
     # -- evaluation ------------------------------------------------------
     def evaluate(self) -> float:
@@ -166,10 +182,10 @@ class FedAvgSat(SpaceifiedFL):
 
     def run_round(self, r, t):
         cfg = self.cfg
-        sel = self.select_clients(t)
+        proj = self._projected_returns(t, cfg.epochs)
+        sel = self._select_from_projections(proj)
         if not sel:
             return None
-        projs = {k: self._projected_return(k, t, cfg.epochs) for k in sel}
         # train selected clients (vmapped, same epoch count: synchronous)
         self.key, *keys = jax.random.split(self.key, len(sel) + 1)
         stacked = jax.tree.map(
@@ -182,15 +198,13 @@ class FedAvgSat(SpaceifiedFL):
         n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
         self.global_params = weighted_average(trained, n_k)
 
-        ends, idles, comms, trains = [], [], [], []
-        for k in sel:
-            w, recv_end, train_end, ret, relay = projs[k]
-            up_end = ret[0] + self._t_down()
-            ends.append(up_end)
-            idles.append((w[0] - t) + (ret[0] - train_end))
-            comms.append(self._t_up() + self._t_down())
-            trains.append(train_end - recv_end)
-        t_round_end = max(ends)
+        ks = np.asarray(sel)
+        ends = proj["ret_avail"][ks] + self._t_down()
+        idles = (proj["contact_avail"][ks] - t) \
+            + (proj["ret_avail"][ks] - proj["train_end"][ks])
+        comms = np.full(len(sel), self._t_up() + self._t_down())
+        trains = proj["train_end"][ks] - proj["recv_end"][ks]
+        t_round_end = float(ends.max())
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
         return RoundRecord(r, t, t_round_end, t_round_end - t,
@@ -275,6 +289,7 @@ class FedBuffSat(SpaceifiedFL):
         client_params: Dict[int, object] = {}
         pickup_round: Dict[int, int] = {}
         epochs_of: Dict[int, int] = {}
+        idle_of: Dict[int, float] = {}      # gap between train-end and return
         for k in range(K):
             w = plan.next_contact(k, t0)
             if w is None:
@@ -289,6 +304,7 @@ class FedBuffSat(SpaceifiedFL):
             client_params[k] = self.global_params
             pickup_round[k] = 0
             epochs_of[k] = ep
+            idle_of[k] = max(ret[0] - (recv_end + ep * hw.epoch_time_s), 0.0)
 
         buf, r = [], 0
         t_round_start = t0
@@ -309,6 +325,7 @@ class FedBuffSat(SpaceifiedFL):
             buf.append(delta)
             comm_acc += self._t_up() + self._t_down()
             train_acc += epochs_of[k] * hw.epoch_time_s
+            idle_acc += idle_of.get(k, 0.0)
             n_ev += 1
             # client immediately picks up the current global and continues
             recv_end = t_ret + self._t_up()
@@ -320,6 +337,8 @@ class FedBuffSat(SpaceifiedFL):
                 client_params[k] = self.global_params
                 pickup_round[k] = r
                 epochs_of[k] = ep
+                idle_of[k] = max(nxt[0] - (recv_end + ep * hw.epoch_time_s),
+                                 0.0)
 
             if len(buf) >= cfg.buffer_size:
                 mean_delta = jax.tree.map(
@@ -332,8 +351,7 @@ class FedBuffSat(SpaceifiedFL):
                 dur = t_ret - t_round_start
                 self.records.append(RoundRecord(
                     r, t_round_start, t_ret, dur,
-                    max(dur - train_acc / max(n_ev, 1)
-                        - comm_acc / max(n_ev, 1), 0.0) * 0.05,
+                    idle_acc / max(n_ev, 1),
                     comm_acc / max(n_ev, 1), train_acc / max(n_ev, 1),
                     acc, [], epochs=float(np.mean(list(epochs_of.values())))))
                 t_round_start = t_ret

@@ -1,6 +1,7 @@
 """Visibility: satellite<->ground-station elevation masks, inter-plane LOS,
 and boolean-series -> access-window extraction. Math vectorized in JAX,
-window bookkeeping in numpy (host-side event logic).
+window bookkeeping vectorized in numpy (one diff pass over the full
+(T, K, G) tensor — no per-(sat, station) Python loops).
 """
 from __future__ import annotations
 
@@ -13,12 +14,18 @@ import numpy as np
 from repro.orbit.constellation import R_EARTH, WalkerStar
 from repro.orbit.propagate import ecef_positions, eci_positions
 
+# elevation_mask_series materialises (chunk, K, G, 3) relative vectors; cap
+# the chunk so mega-constellations (K*G in the 10^4 range) stay in memory.
+_CHUNK_ELEM_BUDGET = 2 ** 25
+
 
 def elevation_mask_series(c: WalkerStar, raan, phase, incl, times, gs,
                           min_elev_deg: float = 10.0, chunk: int = 4096):
     """Boolean visibility (T, K, G): sat k visible from station g at time t."""
     gs = jnp.asarray(gs)                                   # (G, 3)
     min_sin = jnp.sin(jnp.radians(min_elev_deg))
+    kg = max(int(c.n_sats) * int(gs.shape[0]), 1)
+    chunk = max(1, min(chunk, _CHUNK_ELEM_BUDGET // kg))
 
     @jax.jit
     def block(ts):
@@ -62,36 +69,87 @@ def interplane_los_series(c: WalkerStar, raan, phase, incl, times,
     return np.concatenate(outs, axis=0)
 
 
+def _grid_dt(times: np.ndarray) -> float:
+    if len(times) < 2:
+        return 0.0
+    dt = float(times[1] - times[0])
+    if not np.allclose(np.diff(times), dt):
+        raise ValueError("uniform time grid required: window ends are "
+                         "last-visible-sample + dt")
+    return dt
+
+
 def windows_from_bool(vis: np.ndarray, times: np.ndarray
                       ) -> List[Tuple[float, float]]:
-    """(T,) bool -> [(t_start, t_end)] contiguous visibility windows."""
+    """(T,) bool -> [(t_start, t_end)] contiguous visibility windows.
+
+    ``times`` must be a uniform grid. A window's end is the last *visible*
+    sample plus the grid step, so a window running into the horizon has the
+    same duration semantics as one ending mid-series.
+    """
     vis = np.asarray(vis, bool)
     if vis.ndim != 1:
         raise ValueError("1-D series expected")
     if not vis.any():
         return []
-    d = np.diff(vis.astype(np.int8))
-    starts = list(np.where(d == 1)[0] + 1)
-    ends = list(np.where(d == -1)[0] + 1)
-    if vis[0]:
-        starts = [0] + starts
-    if vis[-1]:
-        ends = ends + [len(vis)]
-    return [(float(times[s]), float(times[min(e, len(times) - 1)]))
+    times = np.asarray(times, float)
+    dt = _grid_dt(times)
+    d = np.diff(np.concatenate([[False], vis, [False]]).astype(np.int8))
+    starts = np.nonzero(d == 1)[0]
+    ends = np.nonzero(d == -1)[0]          # exclusive index of last visible
+    return [(float(times[s]), float(times[e - 1]) + dt)
             for s, e in zip(starts, ends)]
+
+
+def windows_from_bool_tensor(vis: np.ndarray, times: np.ndarray):
+    """Vectorized window extraction from the full (T, K, G) tensor.
+
+    One diff pass over the whole tensor; returns flat arrays
+    ``(sat, gs, t_start, t_end)`` sorted by (sat, t_start, t_end, gs) —
+    the same per-satellite ordering the scalar extraction produced.
+    ``times`` must be a uniform grid (window ends are last-visible + dt).
+    """
+    vis = np.asarray(vis, bool)
+    if vis.ndim != 3:
+        raise ValueError("(T, K, G) tensor expected")
+    times = np.asarray(times, float)
+    dt = _grid_dt(times)
+    # rising edges (first visible sample) and last visible samples, computed
+    # along the native time axis — no transpose or int8 conversion copies.
+    rise = np.empty_like(vis)
+    rise[0] = vis[0]
+    np.logical_and(vis[1:], ~vis[:-1], out=rise[1:])
+    last = np.empty_like(vis)
+    last[-1] = vis[-1]
+    np.logical_and(vis[:-1], ~vis[1:], out=last[:-1])
+    rt, rk, rg = np.nonzero(rise)
+    lt, lk, lg = np.nonzero(last)
+    # pair the i-th rise with the i-th last-visible sample of each (k, g)
+    # series, then order per satellite by (start, end, gs) — the ordering
+    # the scalar extraction produced.
+    ro = np.lexsort((rt, rg, rk))
+    lo = np.lexsort((lt, lg, lk))
+    sat, gsi = rk[ro], rg[ro]
+    s = times[rt[ro]]
+    e = times[lt[lo]] + dt
+    order = np.lexsort((gsi, e, s, sat))
+    return sat[order], gsi[order], s[order], e[order]
+
+
+def access_window_arrays(c: WalkerStar, raan, phase, incl, times, gs,
+                         min_elev_deg: float = 10.0, chunk: int = 4096):
+    """Flat (sat, gs, start, end) window arrays for the whole constellation."""
+    vis = elevation_mask_series(c, raan, phase, incl, times, gs,
+                                min_elev_deg, chunk=chunk)
+    return windows_from_bool_tensor(vis, np.asarray(times))
 
 
 def access_windows(c: WalkerStar, raan, phase, incl, times, gs,
                    min_elev_deg: float = 10.0):
     """Per-satellite list of (t_start, t_end, gs_index) windows, sorted."""
-    vis = elevation_mask_series(c, raan, phase, incl, times, gs, min_elev_deg)
-    times = np.asarray(times)
-    out = []
-    for k in range(vis.shape[1]):
-        wins = []
-        for g in range(vis.shape[2]):
-            for (s, e) in windows_from_bool(vis[:, k, g], times):
-                wins.append((s, e, g))
-        wins.sort()
-        out.append(wins)
+    sat, gsi, s, e = access_window_arrays(c, raan, phase, incl, times, gs,
+                                          min_elev_deg)
+    out: List[List[Tuple[float, float, int]]] = [[] for _ in range(c.n_sats)]
+    for k, g, ts, te in zip(sat, gsi, s, e):
+        out[int(k)].append((float(ts), float(te), int(g)))
     return out

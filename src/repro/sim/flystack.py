@@ -31,6 +31,7 @@ class SimConfig:
     dt_s: float = 30.0
     n_per_client: int = 64
     alpha: float = 0.5                   # dirichlet non-IID skew
+    min_elev_deg: float = 10.0           # GS elevation mask
     fl: FLConfig = dataclasses.field(default_factory=FLConfig)
     epochs_mode: str = "fixed"           # autoflsat: "fixed" | "auto"
     seed: int = 0
@@ -90,7 +91,7 @@ class FLySTacK:
         self.plan = plan if plan is not None else build_contact_plan(
             cfg.n_clusters, cfg.sats_per_cluster, cfg.n_ground_stations,
             horizon_s=cfg.horizon_days * 86_400, dt_s=cfg.dt_s,
-            with_isl_pairs=needs_isl)
+            min_elev_deg=cfg.min_elev_deg, with_isl_pairs=needs_isl)
         self.dataset = make_federated_dataset(
             cfg.dataset, n_clients=cfg.n_clusters * cfg.sats_per_cluster,
             n_per_client=cfg.n_per_client, alpha=cfg.alpha, seed=cfg.seed)

@@ -1,0 +1,269 @@
+"""Golden parity tests: the vectorized contact-plan engine must return
+results identical to the retained reference scalar implementations
+(repro.core.contact_plan_ref) on randomized constellations, including the
+edge cases (pass in progress at t, empty window lists, horizon-end
+windows), and the batched client selection must pick the same clients and
+produce the same round timings as the original K-sequential-scan path."""
+import numpy as np
+import pytest
+
+from repro.core import contact_plan_ref as ref
+from repro.core.contact_plan import ContactPlan, build_contact_plan
+from repro.core.spaceify import FLConfig, FedAvgSat, SpaceifiedFL
+from repro.orbit.constellation import WalkerStar
+from repro.orbit.visibility import windows_from_bool, windows_from_bool_tensor
+from repro.sim.hardware import SMALLSAT_SBAND
+
+
+# ---------------------------------------------------------------------------
+# randomized synthetic contact plans (no orbit propagation needed)
+# ---------------------------------------------------------------------------
+
+
+def random_plan(rng, nc, spc, n_gs, horizon=86400.0, p_empty=0.25,
+                min_isl_sats=10):
+    """Random but structurally valid plan: per-(sat, gs) streams of disjoint
+    windows (overlapping across gs), some satellites with no windows at all,
+    some windows clipped at the horizon; disjoint sorted pair windows."""
+    K = nc * spc
+    sat_windows = []
+    for _ in range(K):
+        wins = []
+        if rng.random() > p_empty:
+            for g in range(n_gs):
+                t = rng.uniform(0, 4000)
+                while t < horizon:
+                    dur = rng.uniform(100, 900)
+                    wins.append((t, min(t + dur, horizon), g))
+                    t += dur + rng.uniform(500, 9000)
+        wins.sort()
+        sat_windows.append(wins)
+    pair_windows = {}
+    for ci in range(nc):
+        for cj in range(ci + 1, nc):
+            wins, t = [], rng.uniform(0, 2000)
+            while t < horizon and rng.random() > 0.05:
+                dur = rng.uniform(30, 400)
+                wins.append((t, t + dur))
+                t += dur + rng.uniform(200, 5000)
+            pair_windows[(ci, cj)] = wins
+    return ContactPlan(constellation=WalkerStar(nc, spc), horizon_s=horizon,
+                       sat_windows=sat_windows,
+                       cluster_of=np.repeat(np.arange(nc), spc),
+                       pair_windows=pair_windows,
+                       min_isl_sats=min_isl_sats)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_next_contact_parity_randomized(seed):
+    rng = np.random.default_rng(seed)
+    nc, spc, n_gs = int(rng.integers(1, 5)), int(rng.integers(1, 9)), \
+        int(rng.integers(1, 4))
+    plan = random_plan(rng, nc, spc, n_gs)
+    K = plan.constellation.n_sats
+    # scalar queries before, inside, between, and past all windows
+    for t in rng.uniform(-500, plan.horizon_s + 2000, 60):
+        for k in range(K):
+            assert plan.next_contact(k, float(t)) == \
+                ref.next_contact_ref(plan.sat_windows, k, float(t))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_batched_queries_parity_randomized(seed):
+    rng = np.random.default_rng(100 + seed)
+    nc, spc = int(rng.integers(1, 4)), int(rng.integers(1, 13))
+    plan = random_plan(rng, nc, spc, int(rng.integers(1, 4)),
+                       min_isl_sats=int(rng.integers(1, 12)))
+    K = plan.constellation.n_sats
+    for _ in range(5):
+        tvec = rng.uniform(-100, plan.horizon_s + 1000, K)
+        av, en, gs, valid = plan.next_contacts(tvec)
+        ca, ce, cg, rel, cvalid = plan.next_cluster_contacts(tvec)
+        for k in range(K):
+            want = ref.next_contact_ref(plan.sat_windows, k, float(tvec[k]))
+            if want is None:
+                assert not valid[k]
+            else:
+                assert valid[k]
+                assert (av[k], en[k], int(gs[k])) == want
+            cwant = ref.next_cluster_contact_ref(plan, k, float(tvec[k]))
+            if cwant is None:
+                assert not cvalid[k]
+            else:
+                assert cvalid[k]
+                assert (ca[k], ce[k], int(cg[k]), int(rel[k])) == cwant
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pair_queries_parity_randomized(seed):
+    rng = np.random.default_rng(200 + seed)
+    plan = random_plan(rng, int(rng.integers(2, 6)), 2, 1)
+    for key in plan.pair_windows:
+        for t in rng.uniform(-100, plan.horizon_s + 1000, 25):
+            tx = float(rng.uniform(0, 3000))
+            got = plan.transmit_over_pair(*key, float(t), tx)
+            want = ref.transmit_over_pair_ref(plan.pair_windows, *key,
+                                              float(t), tx)
+            assert (got is None) == (want is None)
+            if got is not None:
+                assert got == pytest.approx(want, abs=1e-9)
+            md = float(rng.uniform(0, 300))
+            got = plan.next_pair_window(*key, float(t), md)
+            want = ref.next_pair_window_ref(plan.pair_windows, *key,
+                                            float(t), md)
+            assert got == want
+
+
+def test_edge_cases():
+    plan = ContactPlan(
+        constellation=WalkerStar(1, 3), horizon_s=1000.0,
+        sat_windows=[
+            [(100.0, 200.0, 0), (150.0, 400.0, 1), (500.0, 1000.0, 0)],
+            [],                                     # no windows at all
+            [(900.0, 1000.0, 0)],                   # horizon-end only
+        ],
+        cluster_of=np.zeros(3, int),
+        pair_windows={}, min_isl_sats=1)
+    # pass in progress at t: starts at t, not at the window start
+    assert plan.next_contact(0, 120.0) == (120.0, 200.0, 0)
+    # first-window-by-END semantics: at t=300 the (150, 400) window is live
+    assert plan.next_contact(0, 300.0) == (300.0, 400.0, 1)
+    # empty window list
+    assert plan.next_contact(1, 0.0) is None
+    # past the last window
+    assert plan.next_contact(2, 1000.0) is None
+    av, en, gs, valid = plan.next_contacts(0.0)
+    assert list(valid) == [True, False, True]
+    assert (av[0], en[0], gs[0]) == (100.0, 200.0, 0)
+    assert (av[2], en[2], gs[2]) == (900.0, 1000.0, 0)
+    # cluster relay: sat 0's pass-in-progress (avail 850) beats sat 2's 900
+    assert plan.next_cluster_contact(1, 850.0) == (850.0, 1000.0, 0, 0)
+    # ... and once sat 0's last window closes, sat 2 is the relay
+    assert plan.next_cluster_contact(1, 1000.0) is None
+    assert plan.next_cluster_contact(1, 899.0)[3] == 0
+
+
+def test_transmit_over_pair_multi_window_resume():
+    plan = ContactPlan(
+        constellation=WalkerStar(2, 1), horizon_s=1000.0,
+        sat_windows=[[], []], cluster_of=np.array([0, 1]),
+        pair_windows={(0, 1): [(0.0, 10.0), (100.0, 110.0),
+                               (200.0, 230.0)]})
+    # fits in the first (partial) window
+    assert plan.transmit_over_pair(0, 1, 4.0, 5.0) == pytest.approx(9.0)
+    # spans all three windows: 6 + 10 + 9 seconds of airtime
+    assert plan.transmit_over_pair(0, 1, 4.0, 25.0) == pytest.approx(209.0)
+    # exactly exhausts a window boundary
+    assert plan.transmit_over_pair(0, 1, 0.0, 20.0) == pytest.approx(110.0)
+    # more airtime than the plan holds
+    assert plan.transmit_over_pair(0, 1, 0.0, 51.0) is None
+    # chain helper equals the sequential loop
+    assert plan.chain_pair_transfers(0.0, 5.0) == (5.0, [(0, 1, 0.0)])
+
+
+# ---------------------------------------------------------------------------
+# window extraction
+# ---------------------------------------------------------------------------
+
+
+def test_windows_from_bool_horizon_end_consistent():
+    t = np.arange(10.0)
+    v = np.array([0, 1, 1, 0, 0, 1, 1, 1, 0, 1], bool)
+    # every window ends at its last visible sample + dt — including the one
+    # running into the horizon, which used to be clamped to times[-1].
+    assert windows_from_bool(v, t) == [(1.0, 3.0), (5.0, 8.0), (9.0, 10.0)]
+    assert windows_from_bool(np.zeros(5, bool), np.arange(5.0)) == []
+    assert windows_from_bool(np.ones(4, bool), np.arange(0, 8, 2.0)) == \
+        [(0.0, 8.0)]
+    # non-uniform grids are rejected loudly, not silently mis-measured
+    with pytest.raises(ValueError, match="uniform"):
+        windows_from_bool(np.ones(3, bool), np.array([0.0, 1.0, 10.0]))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_windows_from_bool_tensor_parity(seed):
+    rng = np.random.default_rng(300 + seed)
+    T, K, G = int(rng.integers(2, 300)), int(rng.integers(1, 9)), \
+        int(rng.integers(1, 4))
+    times = np.arange(T) * float(rng.uniform(1.0, 60.0))
+    vis = rng.random((T, K, G)) < rng.uniform(0.05, 0.9)
+    want = ref.access_windows_ref(vis, times)
+    sat, gsi, s, e = windows_from_bool_tensor(vis, times)
+    got = [[] for _ in range(K)]
+    for k, g, a, b in zip(sat, gsi, s, e):
+        got[int(k)].append((float(a), float(b), int(g)))
+    assert got == want
+    for k in range(K):
+        for g in range(G):
+            assert windows_from_bool(vis[:, k, g], times) == \
+                ref.windows_from_bool_ref(vis[:, k, g], times)
+
+
+# ---------------------------------------------------------------------------
+# scheduling decisions: batched selection == reference scalar selection
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def real_plan():
+    return build_contact_plan(2, 3, 2, horizon_s=0.5 * 86400, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    from repro.data.synthetic import make_federated_dataset
+    return make_federated_dataset("femnist", 6, 16)
+
+
+@pytest.mark.parametrize("selection",
+                         ["first_contact", "scheduled", "intra_sl"])
+def test_select_clients_parity(real_plan, dataset, selection):
+    cfg = FLConfig(clients_per_round=3, epochs=2, selection=selection,
+                   max_rounds=2)
+    algo = FedAvgSat(real_plan, SMALLSAT_SBAND, dataset, cfg)
+    for t in [0.0, 1000.0, 12_000.0, 30_000.0, 43_000.0]:
+        assert algo.select_clients(t) == ref.select_clients_ref(
+            real_plan, SMALLSAT_SBAND, cfg, t,
+            algo._t_up(), algo._t_down())
+
+
+class _ReferenceSelectionFL(FedAvgSat):
+    """FedAvgSat forced through the original scalar selection path."""
+
+    def select_clients(self, t):
+        return ref.select_clients_ref(self.plan, self.hw, self.cfg, t,
+                                      self._t_up(), self._t_down())
+
+
+def test_round_timings_identical(real_plan, dataset):
+    cfg = FLConfig(clients_per_round=3, epochs=1, max_rounds=2,
+                   batch_size=16, selection="scheduled", eval_every=100)
+    fast = FedAvgSat(real_plan, SMALLSAT_SBAND, dataset, cfg).run()
+    slow = _ReferenceSelectionFL(real_plan, SMALLSAT_SBAND, dataset,
+                                 cfg).run()
+    assert len(fast) == len(slow) >= 1
+    for a, b in zip(fast, slow):
+        assert a.participants == b.participants
+        assert a.t_start == b.t_start and a.t_end == b.t_end
+        assert a.idle_s == b.idle_s and a.comm_s == b.comm_s
+
+
+def test_projected_returns_match_scalar(real_plan, dataset):
+    for selection in ["first_contact", "scheduled", "intra_sl"]:
+        cfg = FLConfig(selection=selection)
+        algo = FedAvgSat(real_plan, SMALLSAT_SBAND, dataset, cfg)
+        for t in [0.0, 9000.0, 25_000.0]:
+            batched = algo._projected_returns(t, cfg.epochs)
+            for k in range(real_plan.constellation.n_sats):
+                scal = algo._projected_return(k, t, cfg.epochs)
+                if scal is None:
+                    assert not batched["valid"][k]
+                    continue
+                w, recv_end, train_end, ret, relay = scal
+                assert batched["valid"][k]
+                assert batched["contact_avail"][k] == w[0]
+                assert batched["recv_end"][k] == recv_end
+                assert batched["train_end"][k] == train_end
+                assert batched["ret_avail"][k] == ret[0]
+                assert int(batched["relay"][k]) == relay

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.aggregation import inplace_aggregate, weighted_average
@@ -125,7 +126,8 @@ def test_windows_from_bool():
     t = np.arange(10.0)
     v = np.array([0, 1, 1, 0, 0, 1, 1, 1, 0, 1], bool)
     w = windows_from_bool(v, t)
-    assert w == [(1.0, 3.0), (5.0, 8.0), (9.0, 9.0)]
+    # every window ends at last-visible-sample + dt, incl. at the horizon
+    assert w == [(1.0, 3.0), (5.0, 8.0), (9.0, 10.0)]
 
 
 @pytest.fixture(scope="module")

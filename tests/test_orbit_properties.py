@@ -1,6 +1,9 @@
 """Property-based tests on orbital-mechanics invariants (hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.orbit.constellation import (R_EARTH, WalkerStar,

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core import hierarchy as H
-from repro.core.aggregation import pytree_bytes
 from repro.core.contact_plan import build_contact_plan
+from repro.core.quantize import transmit_bytes
 from repro.data.tokens import synthetic_lm_batches
 from repro.optim.optimizers import AdamWConfig
 from repro.sim.hardware import SMALLSAT_SBAND
@@ -31,9 +31,10 @@ OPT = AdamWConfig(lr=3e-3, warmup_steps=5)
 state = H.init_hfl_state(jax.random.PRNGKey(0), CFG, NC)
 plan = build_contact_plan(NC, 10, 3, horizon_s=86400.0, dt_s=60.0,
                           with_isl_pairs=True)
+# ISL exchange billed at the same 10-bit QuAFL wire size the sync uses
 h_sync = H.sync_interval_from_orbits(
-    plan, SMALLSAT_SBAND, pytree_bytes(state.params) / NC, step_time_s=5.0,
-    max_h=10)
+    plan, SMALLSAT_SBAND, transmit_bytes(state.params, 10) / NC,
+    step_time_s=5.0, max_h=10)
 print(f"ISL schedule => cluster sync every H={h_sync} steps")
 
 local = jax.jit(H.make_hfl_local_step(CFG, OPT), donate_argnums=0)

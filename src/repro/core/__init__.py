@@ -1,9 +1,15 @@
-from repro.core.aggregation import inplace_aggregate, weighted_average
+from repro.core.aggregation import (inplace_aggregate,
+                                    quantized_weighted_average,
+                                    weighted_average)
 from repro.core.quantize import (
     dequantize_pytree,
     quantize_pytree,
+    quantize_roundtrip,
     quantized_bytes,
+    transmit_bytes,
 )
 
-__all__ = ["inplace_aggregate", "weighted_average", "quantize_pytree",
-           "dequantize_pytree", "quantized_bytes"]
+__all__ = ["inplace_aggregate", "weighted_average",
+           "quantized_weighted_average", "quantize_pytree",
+           "dequantize_pytree", "quantize_roundtrip", "quantized_bytes",
+           "transmit_bytes"]

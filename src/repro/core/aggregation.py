@@ -8,22 +8,39 @@ step for quantized (QuAFL) updates on TPU.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Iterable, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
+@jax.jit
+def _weighted_average_impl(stacked_params, w):
+    def avg(leaf):
+        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        # zero-weight rows (padded cohort slots) are forced to exact +0.0
+        # rather than relying on 0*x: a non-finite pad row (0*inf = NaN)
+        # must not poison the aggregate of the real cohort members.
+        terms = jnp.where(wb > 0, leaf.astype(jnp.float32) * wb, 0.0)
+        # strictly-ordered accumulation loop, NOT a reduction tree (the
+        # loop-carried dependence pins the float-add order): appending
+        # zero-weight rows — the padded round engine's masked cohort
+        # slots — is an exact IEEE no-op, so the result is bitwise
+        # independent of the padding width.
+        acc = jax.lax.fori_loop(
+            0, leaf.shape[0], lambda i, a: a + terms[i],
+            jnp.zeros(leaf.shape[1:], jnp.float32))
+        return acc.astype(leaf.dtype)
+
+    return jax.tree.map(avg, stacked_params)
+
+
 def weighted_average(stacked_params, weights):
     """stacked_params: pytree with leading client axis (K, ...); weights (K,)."""
     w = jnp.asarray(weights, jnp.float32)
     w = w / jnp.maximum(w.sum(), 1e-9)
-
-    def avg(leaf):
-        wb = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
-        return (leaf.astype(jnp.float32) * wb).sum(0).astype(leaf.dtype)
-
-    return jax.tree.map(avg, stacked_params)
+    return _weighted_average_impl(stacked_params, w)
 
 
 def inplace_aggregate(updates: Iterable[Tuple], template=None):
@@ -45,6 +62,57 @@ def inplace_aggregate(updates: Iterable[Tuple], template=None):
     if acc is None:
         raise ValueError("no updates")
     return jax.tree.map(lambda a: a / total, acc)
+
+
+def quantized_weighted_average(stacked_params, weights, bits: int,
+                               mode: str = "auto"):
+    """Weighted average over the QuAFL wire format: each client row of the
+    stacked pytree is quantized to ``bits`` with its own per-tensor scale,
+    then the server dequantizes + accumulates the whole cohort through the
+    fused ``quant_agg`` kernel (``mode``: "auto" | "pallas" |
+    "pallas_interpret" | "jnp" — see repro.kernels.ops).
+
+    Zero-weight rows (padded cohort slots) contribute nothing: their
+    weight*scale product is 0."""
+    from repro.core.quantize import quantize_stacked
+    from repro.kernels.ops import quantized_stacked_accumulate
+
+    w = jnp.asarray(weights, jnp.float32)
+    w = w / jnp.maximum(w.sum(), 1e-9)
+
+    def agg(leaf):
+        q, scale = quantize_stacked(leaf, bits)
+        acc = jnp.zeros(leaf.shape[1:], jnp.float32)
+        # zero-weight rows contribute exactly 0 even if their scale is
+        # non-finite (a NaN pad row would otherwise give sw = 0*NaN = NaN)
+        sw = jnp.where(w > 0, w * scale, 0.0)
+        out = quantized_stacked_accumulate(acc, q, sw, mode=mode)
+        return out.astype(leaf.dtype)
+
+    return jax.tree.map(agg, stacked_params)
+
+
+@jax.jit
+def apply_buffered_deltas(global_params, stacked_new, stacked_base, weights):
+    """FedBuff flush as one stacked reduction: global += mean_k of
+    weights[k] * (new_k - base_k). ``stacked_new``/``stacked_base`` carry a
+    leading buffer axis (D, ...); one trace per buffer size."""
+    def upd(g, n, b):
+        wb = weights.reshape((-1,) + (1,) * (n.ndim - 1))
+        d = (wb * (n.astype(jnp.float32) - b.astype(jnp.float32))).mean(0)
+        return (g.astype(jnp.float32) + d).astype(g.dtype)
+    return jax.tree.map(upd, global_params, stacked_new, stacked_base)
+
+
+@partial(jax.jit, static_argnames=("n_segments",))
+def segment_mean(stacked_params, n_segments: int):
+    """Mean over contiguous equal-size segments of the leading axis:
+    (S*m, ...) -> (S, ...). The tier-1 AutoFLSat cluster aggregation for
+    all clusters in one dispatch."""
+    def f(leaf):
+        seg = leaf.reshape((n_segments, -1) + leaf.shape[1:])
+        return seg.astype(jnp.float32).mean(1).astype(leaf.dtype)
+    return jax.tree.map(f, stacked_params)
 
 
 def pytree_bytes(params, bits=32):

@@ -20,9 +20,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import weighted_average
+from repro.core.aggregation import segment_mean
 from repro.core.client import local_sgd_clients
 from repro.core.contact_plan import ContactPlan
+from repro.core.quantize import quantize_roundtrip_stacked
 from repro.core.spaceify import FLConfig, RoundRecord, SpaceifiedFL
 
 
@@ -80,24 +81,30 @@ class AutoFLSat(SpaceifiedFL):
         spc = plan.constellation.sats_per_cluster
 
         # tier 1: synchronous intra-cluster FL (all satellites participate)
-        self.key, *keys = jax.random.split(self.key, C * spc + 1)
-        keys = jnp.stack(keys).reshape(C, spc, 2)
-        new_cluster_params = []
-        for c in range(C):
-            sats = np.arange(c * spc, (c + 1) * spc)
-            stacked = jax.tree.map(
-                lambda p: jnp.broadcast_to(p[c], (spc,) + p[c].shape),
-                self.cluster_params)
-            trained = local_sgd_clients(
-                cfg.model, stacked, self.ds.x[sats], self.ds.y[sats],
-                keys[c], e, cfg.batch_size, cfg.lr)
-            new_cluster_params.append(
-                weighted_average(trained, np.full(spc, 1.0)))
-        stacked_clusters = jax.tree.map(
-            lambda *ls: jnp.stack(ls), *new_cluster_params)
+        # as ONE (C*spc)-wide vmapped dispatch + a segment-wise cluster
+        # aggregation — no per-cluster Python loop, so the trainer compiles
+        # once for the whole constellation.
+        K = C * spc
+        ks = jax.random.split(self.key, K + 1)
+        self.key = ks[0]
+        keys = ks[1:]                        # sat (c, s) gets row c*spc + s
+        bcast = self.cluster_params
+        if cfg.quant_bits:                   # every transmitted model is
+            bcast = quantize_roundtrip_stacked(bcast, cfg.quant_bits)
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(
+                p[:, None], (C, spc) + p.shape[1:]).reshape(
+                    (K,) + p.shape[1:]), bcast)
+        trained = local_sgd_clients(
+            cfg.model, stacked, self.ds.x, self.ds.y,
+            keys, e, cfg.batch_size, cfg.lr)
+        if cfg.quant_bits:                   # member -> cluster-head return
+            trained = quantize_roundtrip_stacked(trained, cfg.quant_bits)
+        stacked_clusters = segment_mean(trained, C)
 
-        # tier 2: all-to-all exchange -> constellation-wide model
-        self.global_params = weighted_average(
+        # tier 2: all-to-all exchange -> constellation-wide model (the
+        # exchanged cluster models cross ISLs quantized when quant_bits>0)
+        self.global_params = self._aggregate(
             stacked_clusters, np.full(C, float(spc)))
         self.cluster_params = jax.tree.map(
             lambda g: jnp.broadcast_to(g, (C,) + g.shape), self.global_params)

@@ -1,8 +1,15 @@
 """On-board local training (ClientUpdate in Algorithms 1-4).
 
 ``local_sgd`` runs E epochs of minibatch SGD, optionally with the FedProx
-proximal term mu/2 * ||w - w_global||^2. It is jit-compiled and vmapped
-across the satellites selected in a round (stacked client data)."""
+proximal term mu/2 * ||w - w_global||^2. ``local_sgd_clients`` is the round
+engine's hot path: a top-level jit of the vmapped trainer, so one cohort of
+stacked clients is one compiled dispatch. Its cache is keyed on
+(model, batch_size, mu_on, cohort width, data shapes) ONLY — epochs, lr, mu
+and the params themselves are dynamic, so a padded fixed-width cohort
+compiles exactly once per configuration no matter how per-round eligibility
+fluctuates. ``train_cache_sizes`` exposes the jit cache counters so tests
+and benchmarks can assert the compile-once invariant.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -39,12 +46,9 @@ def _one_epoch(apply_fn, params, x, y, lr, mu, global_params, batch_size, key):
     return params
 
 
-@partial(jax.jit, static_argnames=("model", "batch_size", "mu_on"))
-def local_sgd(model: str, params, x, y, key, epochs, batch_size: int,
-              lr: float, mu: float = 0.0, mu_on: bool = False,
-              global_params=None):
-    """Train one client for `epochs` epochs (dynamic bound — no recompiles
-    when FedProx derives epochs from orbital timing). Returns params."""
+def _local_sgd(model: str, params, x, y, key, epochs, batch_size: int,
+               lr: float, mu: float = 0.0, mu_on: bool = False,
+               global_params=None):
     apply_fn = MODELS[model][1]
     gp = global_params if mu_on else None
     epochs = jnp.asarray(epochs, jnp.int32)
@@ -60,14 +64,39 @@ def local_sgd(model: str, params, x, y, key, epochs, batch_size: int,
     return params
 
 
+# Train one client for `epochs` epochs (dynamic bound — no recompiles when
+# FedProx derives epochs from orbital timing). Returns params.
+local_sgd = jax.jit(_local_sgd, static_argnames=("model", "batch_size",
+                                                 "mu_on"))
+
+
+@partial(jax.jit, static_argnames=("model", "batch_size", "mu_on"))
+def _local_sgd_batch(model, stacked_params, xs, ys, keys, epochs, batch_size,
+                     lr, mu, mu_on, global_params):
+    fn = lambda p, x, y, k, e: _local_sgd(model, p, x, y, k, e, batch_size,
+                                          lr, mu, mu_on, global_params)
+    return jax.vmap(fn)(stacked_params, xs, ys, keys, epochs)
+
+
 def local_sgd_clients(model, stacked_params, xs, ys, keys, epochs, batch_size,
                       lr, mu=0.0, global_params=None):
-    """vmap local_sgd across a stacked batch of clients (K, ...).
+    """Train a stacked cohort of clients (W, ...) in one jitted dispatch.
 
-    ``epochs`` may be scalar or per-client (K,) — vmapped either way."""
+    ``epochs`` may be scalar or per-client (W,) — it is a dynamic argument
+    either way, so varying epoch budgets never retrace."""
     mu_on = mu > 0.0
     ep = jnp.broadcast_to(jnp.asarray(epochs, jnp.int32),
                           (jax.tree_util.tree_leaves(xs)[0].shape[0],))
-    fn = lambda p, x, y, k, e: local_sgd(model, p, x, y, k, e, batch_size,
-                                         lr, mu, mu_on, global_params)
-    return jax.vmap(fn)(stacked_params, xs, ys, keys, ep)
+    return _local_sgd_batch(model, stacked_params, xs, ys, keys, ep,
+                            batch_size, lr, mu, mu_on, global_params)
+
+
+def train_cache_sizes() -> dict:
+    """Jit-cache entry counts for the training hot paths (trace counters)."""
+    return {"local_sgd": local_sgd._cache_size(),
+            "local_sgd_clients": _local_sgd_batch._cache_size()}
+
+
+def clear_train_caches() -> None:
+    local_sgd._clear_cache()
+    _local_sgd_batch._clear_cache()

@@ -7,6 +7,8 @@ count is reported separately — ``quantized_bytes`` bills ``bits`` per value,
 which is what the data-rate model charges the radio link)."""
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
 
@@ -32,6 +34,49 @@ def quantize_pytree(params, bits: int):
 def dequantize_pytree(q, scales, dtype=jnp.float32):
     return jax.tree.map(lambda qi, s: (qi.astype(jnp.float32) * s).astype(dtype),
                         q, scales)
+
+
+def quantize_stacked(x, bits: int):
+    """Per-client per-tensor quantization of one stacked leaf (K, ...).
+
+    Returns (q (K, ...) int32, scale (K,) f32) — each client row gets its
+    own symmetric scale, exactly ``_q_leaf`` applied row-wise."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=tuple(range(1, x.ndim)))
+    scale = jnp.maximum(absmax, 1e-12) / qmax
+    sb = scale.reshape((-1,) + (1,) * (x.ndim - 1))
+    q = jnp.clip(jnp.round(xf / sb), -qmax, qmax)
+    return q.astype(jnp.int32), scale
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_roundtrip(params, bits: int):
+    """What the receiver of a ``bits``-bit transmission actually sees:
+    quantize + dequantize every tensor (the live QuAFL wire format)."""
+    q, s = quantize_pytree(params, bits)
+    return dequantize_pytree(q, s)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_roundtrip_stacked(stacked_params, bits: int):
+    """Round-trip a pytree with a leading model axis (K, ...) through the
+    wire format, one scale per model per tensor."""
+    def rt(leaf):
+        q, s = quantize_stacked(leaf, bits)
+        sb = s.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return (q.astype(jnp.float32) * sb).astype(leaf.dtype)
+    return jax.tree.map(rt, stacked_params)
+
+
+def transmit_bytes(params, quant_bits: int = 0) -> float:
+    """Wire-format size of one transmitted model — THE byte count every
+    link type (uplink/downlink/ISL) must bill so the timing model stays
+    consistent when QuAFL compression is on."""
+    if quant_bits:
+        return quantized_bytes(params, quant_bits)
+    from repro.core.aggregation import pytree_bytes
+    return pytree_bytes(params, 32)
 
 
 def quantized_bytes(params, bits: int) -> float:

@@ -1,0 +1,304 @@
+"""The pre-padding round engine, retained as the golden-parity baseline
+(like ``contact_plan_ref`` for the scheduling engine).
+
+These classes re-trace ``local_sgd_clients`` for every distinct cohort
+size, loop over FedProx clients and AutoFLSat clusters in Python, and sync
+to host every 256 evaluation samples — exactly the seed behaviour the
+fixed-shape engine replaces. ``benchmarks/round_engine_perf.py`` and
+``tests/test_round_engine.py`` assert the new engine reproduces their
+participant sets, round timings and (for ``quant_bits=0``) bitwise global
+params, then measure the speedup. Do not "optimize" this module.
+
+One deliberate deviation from the seed: this baseline shares the
+order-pinned ``weighted_average`` (sequential fori_loop accumulation) with
+the new engine. The seed's ``.sum(0)`` let XLA pick a cohort-size-dependent
+reduction tree, so NO unpadded baseline could be bitwise-comparable across
+widths; the shared fold is within float-epsilon of the seed's result
+(``test_weighted_average_matches_manual``) and makes the padded-vs-unpadded
+bitwise gate meaningful."""
+from __future__ import annotations
+
+import heapq
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregation import weighted_average
+from repro.core.autoflsat import AutoFLSat
+from repro.core.client import local_sgd
+from repro.core.spaceify import (FedAvgSat, FedBuffSat, FedProxSat,
+                                 RoundRecord)
+
+
+_SEEN_COHORT_SHAPES = set()
+
+
+def ref_trace_count() -> int:
+    """Distinct cohort configurations dispatched by the seed trainer —
+    each one is a fresh trace+compile of the local-SGD scan (the eager
+    vmap bypasses the countable jit caches, so we track shapes here)."""
+    return len(_SEEN_COHORT_SHAPES)
+
+
+def clear_ref_trace_count() -> None:
+    _SEEN_COHORT_SHAPES.clear()
+
+
+def local_sgd_clients(model, stacked_params, xs, ys, keys, epochs, batch_size,
+                      lr, mu=0.0, global_params=None):
+    """Seed trainer: an eager ``jax.vmap`` over the jitted per-client
+    ``local_sgd`` rebuilt every call (the pre-change hot path)."""
+    mu_on = mu > 0.0
+    w = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    _SEEN_COHORT_SHAPES.add((model, batch_size, mu_on, w))
+    ep = jnp.broadcast_to(jnp.asarray(epochs, jnp.int32), (w,))
+    fn = lambda p, x, y, k, e: local_sgd(model, p, x, y, k, e, batch_size,
+                                         lr, mu, mu_on, global_params)
+    return jax.vmap(fn)(stacked_params, xs, ys, keys, ep)
+
+
+def accuracy_ref(apply_fn, params, x, y, batch=256):
+    """Seed evaluation loop: one host sync per 256-sample slice."""
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        logits = apply_fn(params, x[i:i + batch])
+        correct += int((logits.argmax(-1) == y[i:i + batch]).sum())
+    return correct / x.shape[0]
+
+
+class _RefEval:
+    def evaluate(self):
+        return accuracy_ref(self.apply_fn, self.global_params,
+                            self.ds.x_test, self.ds.y_test)
+
+
+class FedAvgSatRef(_RefEval, FedAvgSat):
+    name = "fedavg_ref"
+
+    def run_round(self, r, t):
+        cfg = self.cfg
+        proj = self._projected_returns(t, cfg.epochs)
+        sel = self._select_from_projections(proj)
+        if not sel:
+            return None
+        # train selected clients (vmapped, same epoch count: synchronous)
+        self.key, *keys = jax.random.split(self.key, len(sel) + 1)
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (len(sel),) + p.shape),
+            self.global_params)
+        xs, ys = self.ds.x[jnp.array(sel)], self.ds.y[jnp.array(sel)]
+        trained = local_sgd_clients(cfg.model, stacked, xs, ys,
+                                    jnp.stack(keys), cfg.epochs,
+                                    cfg.batch_size, cfg.lr)
+        n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
+        self.global_params = weighted_average(trained, n_k)
+
+        ks = np.asarray(sel)
+        ends = proj["ret_avail"][ks] + self._t_down()
+        idles = (proj["contact_avail"][ks] - t) \
+            + (proj["ret_avail"][ks] - proj["train_end"][ks])
+        comms = np.full(len(sel), self._t_up() + self._t_down())
+        trains = proj["train_end"][ks] - proj["recv_end"][ks]
+        t_round_end = float(ends.max())
+        acc = self.evaluate() if r % cfg.eval_every == 0 else \
+            (self.records[-1].accuracy if self.records else 0.0)
+        return RoundRecord(r, t, t_round_end, t_round_end - t,
+                           float(np.mean(idles)), float(np.mean(comms)),
+                           float(np.mean(trains)), acc, sel,
+                           epochs=cfg.epochs)
+
+
+class FedProxSatRef(_RefEval, FedProxSat):
+    name = "fedprox_ref"
+
+    def run_round(self, r, t):
+        cfg = self.cfg
+        sel = self.select_clients(t)
+        if not sel:
+            return None
+        self.key, *keys = jax.random.split(self.key, len(sel) + 1)
+        ends, idles, comms, trains, epoch_list = [], [], [], [], []
+        for k in sel:
+            w = self.plan.next_contact(k, t)
+            recv_end = w[0] + self._t_up()
+            floor_end = recv_end + self.hw.train_time(max(cfg.min_epochs, 1))
+            if cfg.selection == "intra_sl":
+                ret = self.plan.next_cluster_contact(k, floor_end)
+                ret = (ret[0], ret[1], ret[2]) if ret else None
+            else:
+                ret = self.plan.next_contact(k, floor_end)
+            if ret is None:
+                return None          # seed behaviour: abort the whole round
+            epochs = int((ret[0] - recv_end) // self.hw.epoch_time_s)
+            epochs = int(np.clip(epochs, max(cfg.min_epochs, 1),
+                                 cfg.max_local_epochs))
+            train_end = recv_end + self.hw.train_time(epochs)
+            up_end = ret[0] + self._t_down()
+            ends.append(up_end)
+            idles.append((w[0] - t) + max(ret[0] - train_end, 0.0))
+            comms.append(self._t_up() + self._t_down())
+            trains.append(train_end - recv_end)
+            epoch_list.append(epochs)
+        xs, ys = self.ds.x[jnp.array(sel)], self.ds.y[jnp.array(sel)]
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (len(sel),) + p.shape),
+            self.global_params)
+        trained = local_sgd_clients(
+            cfg.model, stacked, xs, ys, jnp.stack(keys),
+            jnp.asarray(epoch_list, jnp.int32), cfg.batch_size, cfg.lr,
+            mu=cfg.prox_mu, global_params=self.global_params)
+        n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
+        self.global_params = weighted_average(trained, n_k)
+        t_round_end = max(ends)
+        acc = self.evaluate() if r % cfg.eval_every == 0 else \
+            (self.records[-1].accuracy if self.records else 0.0)
+        return RoundRecord(r, t, t_round_end, t_round_end - t,
+                           float(np.mean(idles)), float(np.mean(comms)),
+                           float(np.mean(trains)), acc, sel,
+                           epochs=float(np.mean(epoch_list)))
+
+
+class FedBuffSatRef(_RefEval, FedBuffSat):
+    name = "fedbuff_ref"
+
+    def run(self, t0=0.0, t_end=None, max_rounds=None):
+        cfg, plan, hw = self.cfg, self.plan, self.hw
+        t_end = t_end if t_end is not None else plan.horizon_s
+        max_rounds = max_rounds or cfg.max_rounds
+        K = plan.constellation.n_sats
+
+        heap = []
+        client_params: Dict[int, object] = {}
+        pickup_round: Dict[int, int] = {}
+        epochs_of: Dict[int, int] = {}
+        idle_of: Dict[int, float] = {}
+        for k in range(K):
+            w = plan.next_contact(k, t0)
+            if w is None:
+                continue
+            recv_end = w[0] + self._t_up()
+            ret = plan.next_contact(k, recv_end + hw.epoch_time_s)
+            if ret is None:
+                continue
+            ep = int(np.clip((ret[0] - recv_end) // hw.epoch_time_s, 1,
+                             cfg.max_local_epochs))
+            heapq.heappush(heap, (ret[0] + self._t_down(), k))
+            client_params[k] = self.global_params
+            pickup_round[k] = 0
+            epochs_of[k] = ep
+            idle_of[k] = max(ret[0] - (recv_end + ep * hw.epoch_time_s), 0.0)
+
+        buf, r = [], 0
+        t_round_start = t0
+        idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
+        while heap and r < max_rounds:
+            t_ret, k = heapq.heappop(heap)
+            if t_ret > t_end:
+                break
+            self.key, sub = jax.random.split(self.key)
+            trained = local_sgd(cfg.model, client_params[k], self.ds.x[k],
+                                self.ds.y[k], sub, epochs_of[k],
+                                cfg.batch_size, cfg.lr, cfg.prox_mu, True,
+                                client_params[k])
+            stale = r - pickup_round[k]
+            wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
+            delta = jax.tree.map(lambda a, b: (a - b) * wgt, trained,
+                                 client_params[k])
+            buf.append(delta)
+            comm_acc += self._t_up() + self._t_down()
+            train_acc += epochs_of[k] * hw.epoch_time_s
+            idle_acc += idle_of.get(k, 0.0)
+            n_ev += 1
+            recv_end = t_ret + self._t_up()
+            nxt = plan.next_contact(k, recv_end + hw.epoch_time_s)
+            if nxt is not None:
+                ep = int(np.clip((nxt[0] - recv_end) // hw.epoch_time_s, 1,
+                                 cfg.max_local_epochs))
+                heapq.heappush(heap, (nxt[0] + self._t_down(), k))
+                client_params[k] = self.global_params
+                pickup_round[k] = r
+                epochs_of[k] = ep
+                idle_of[k] = max(nxt[0] - (recv_end + ep * hw.epoch_time_s),
+                                 0.0)
+
+            if len(buf) >= cfg.buffer_size:
+                mean_delta = jax.tree.map(
+                    lambda *ds: sum(ds) / len(ds), *buf)
+                self.global_params = jax.tree.map(
+                    lambda p, dlt: p + dlt, self.global_params, mean_delta)
+                buf = []
+                acc = self.evaluate() if r % cfg.eval_every == 0 else \
+                    (self.records[-1].accuracy if self.records else 0.0)
+                dur = t_ret - t_round_start
+                self.records.append(RoundRecord(
+                    r, t_round_start, t_ret, dur,
+                    idle_acc / max(n_ev, 1),
+                    comm_acc / max(n_ev, 1), train_acc / max(n_ev, 1),
+                    acc, [], epochs=float(np.mean(list(epochs_of.values())))))
+                t_round_start = t_ret
+                idle_acc = comm_acc = train_acc = 0.0
+                n_ev = 0
+                r += 1
+        return self.records
+
+
+class AutoFLSatRef(_RefEval, AutoFLSat):
+    name = "autoflsat_ref"
+
+    def run_round(self, r, t):
+        cfg, plan = self.cfg, self.plan
+        sched = self.inter_sl_scheduler(t)
+        if sched is None:
+            return None
+        e = sched.epochs
+        C = self.n_clusters
+        spc = plan.constellation.sats_per_cluster
+
+        # tier 1: per-cluster Python loop (seed behaviour)
+        self.key, *keys = jax.random.split(self.key, C * spc + 1)
+        keys = jnp.stack(keys).reshape(C, spc, 2)
+        new_cluster_params = []
+        for c in range(C):
+            sats = np.arange(c * spc, (c + 1) * spc)
+            stacked = jax.tree.map(
+                lambda p: jnp.broadcast_to(p[c], (spc,) + p[c].shape),
+                self.cluster_params)
+            trained = local_sgd_clients(
+                cfg.model, stacked, self.ds.x[sats], self.ds.y[sats],
+                keys[c], e, cfg.batch_size, cfg.lr)
+            new_cluster_params.append(
+                weighted_average(trained, np.full(spc, 1.0)))
+        stacked_clusters = jax.tree.map(
+            lambda *ls: jnp.stack(ls), *new_cluster_params)
+
+        # tier 2: all-to-all exchange -> constellation-wide model
+        self.global_params = weighted_average(
+            stacked_clusters, np.full(C, float(spc)))
+        self.cluster_params = jax.tree.map(
+            lambda g: jnp.broadcast_to(g, (C,) + g.shape), self.global_params)
+
+        train_time = self.hw.train_time(e)
+        intra_comm = self.hw.tx_time(self.tx_bytes, "isl") * 2.0
+        t_train_done = t + train_time + intra_comm
+        t_round_end = max(sched.t_complete, t_train_done)
+        idle = max(t_round_end - t_train_done, 0.0)
+        acc = self.evaluate() if r % cfg.eval_every == 0 else \
+            (self.records[-1].accuracy if self.records else 0.0)
+        return RoundRecord(r, t, t_round_end, t_round_end - t, idle,
+                           intra_comm * 2
+                           + len(sched.passes)
+                           * self.hw.tx_time(self.tx_bytes, "isl") * 2.0
+                           / max(C, 1),
+                           train_time, acc,
+                           list(range(plan.constellation.n_sats)),
+                           epochs=float(e))
+
+
+REF_ALGORITHMS = {
+    "fedavg": FedAvgSatRef,
+    "fedprox": FedProxSatRef,
+    "fedbuff": FedBuffSatRef,
+    "autoflsat": AutoFLSatRef,
+}

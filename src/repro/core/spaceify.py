@@ -16,6 +16,41 @@ Augmentations (applicable to any space-ified algorithm):
 Algorithms: FedAvgSat (Alg. 1), FedProxSat (Alg. 3, partial updates +
 proximal term, V2 adds a min-epoch floor), FedBuffSat (Alg. 4, async
 buffered aggregation with staleness discounting).
+
+Performance — the fixed-shape round engine
+------------------------------------------
+Training cohorts are padded to the static ``cfg.clients_per_round`` width:
+``_train_cohort`` fills unused slots with client 0's data and a dummy PRNG
+key, and gives them ZERO aggregation weight, so
+``repro.core.client.local_sgd_clients`` sees one shape per configuration
+and compiles exactly once per (model, batch_size, mu_on, cohort width) no
+matter how per-round eligibility fluctuates. The padded-cohort invariant:
+
+  * selection order is computed BEFORE padding, on the same batched
+    contact-plan projections as always — padding only widens the training
+    dispatch, so participant sets and round timings are identical to the
+    unpadded engine (asserted by ``benchmarks/round_engine_perf.py``);
+  * masked slots carry weight 0 in ``weighted_average`` /
+    ``quantized_weighted_average``, whose order-pinned accumulation forces
+    zero-weight terms to exact +0 (even for non-finite rows) before a
+    strictly sequential fold — appending pad slots is an IEEE identity, so
+    ``quant_bits=0`` global params stay bitwise equal to the unpadded path;
+  * per-slot PRNG keys are split ``len(sel)+1`` at a time exactly like the
+    unpadded engine (pad slots reuse the first client key), so the key
+    stream — and therefore training — is reproducible across both paths.
+
+When ``cfg.quant_bits > 0`` the transmitted models are now ACTUALLY
+quantized (QuAFL wire format), not just billed: the broadcast global is
+round-tripped through ``quantize_roundtrip`` and the returned cohort is
+aggregated with ``quantized_weighted_average``, which routes the
+dequantize+accumulate through the ``quant_agg`` Pallas kernel (compiled on
+TPU, jnp fallback elsewhere; ``cfg.quant_kernel`` overrides).
+
+Reproduce the benchmark:
+    PYTHONPATH=src python benchmarks/round_engine_perf.py \
+        --out BENCH_round_engine.json
+(the pre-change engine is retained in ``repro.core.round_engine_ref`` as
+the golden-parity baseline).
 """
 from __future__ import annotations
 
@@ -27,10 +62,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import pytree_bytes, weighted_average
+from repro.core.aggregation import (apply_buffered_deltas,
+                                    quantized_weighted_average,
+                                    weighted_average)
 from repro.core.client import local_sgd, local_sgd_clients
 from repro.core.contact_plan import ContactPlan
-from repro.core.quantize import quantized_bytes
+from repro.core.quantize import quantize_roundtrip, transmit_bytes
 from repro.models.small import MODELS, accuracy
 from repro.sim.hardware import HardwareProfile
 
@@ -52,7 +89,7 @@ class RoundRecord:
 @dataclasses.dataclass
 class FLConfig:
     model: str = "cnn"
-    clients_per_round: int = 10          # C
+    clients_per_round: int = 10          # C (static cohort width)
     epochs: int = 2                      # E (FedAvg; cap for FedProx)
     batch_size: int = 32
     lr: float = 0.05
@@ -64,15 +101,15 @@ class FLConfig:
     staleness_exponent: float = 0.5
     selection: str = "first_contact"     # | "scheduled" | "intra_sl"
     quant_bits: int = 0                  # 0 => f32 transmission
+    quant_kernel: str = "auto"           # quant_agg route: auto | pallas |
+                                         # pallas_interpret | jnp
     max_rounds: int = 500
     seed: int = 0
     eval_every: int = 1
 
 
 def _model_tx_bytes(params, cfg: FLConfig) -> float:
-    if cfg.quant_bits:
-        return quantized_bytes(params, cfg.quant_bits)
-    return pytree_bytes(params, 32)
+    return transmit_bytes(params, cfg.quant_bits)
 
 
 class SpaceifiedFL:
@@ -90,6 +127,7 @@ class SpaceifiedFL:
         self.global_params = init_fn(init_key, img_shape, dataset.n_classes)
         self.tx_bytes = _model_tx_bytes(self.global_params, cfg)
         self.records: List[RoundRecord] = []
+        self._tx_cache = self._tx_cache_src = None
 
     # -- timing helpers -------------------------------------------------
     def _t_up(self):
@@ -150,6 +188,63 @@ class SpaceifiedFL:
         return self._select_from_projections(
             self._projected_returns(t, self.cfg.epochs))
 
+    # -- transmission (live QuAFL wire format) ---------------------------
+    def _tx_global(self):
+        """The global model as the clients receive it over the uplink
+        (memoized per global-params version: FedBuff picks it up once per
+        event, so the round-trip must not be recomputed while the global
+        is unchanged)."""
+        if not self.cfg.quant_bits:
+            return self.global_params
+        if self._tx_cache_src is not self.global_params:
+            self._tx_cache = quantize_roundtrip(self.global_params,
+                                                self.cfg.quant_bits)
+            self._tx_cache_src = self.global_params
+        return self._tx_cache
+
+    def _aggregate(self, stacked, weights):
+        """Server-side aggregation of a returned (stacked) cohort. With
+        quantization on, the cohort is dequantized + accumulated through
+        the quant_agg kernel path."""
+        if self.cfg.quant_bits:
+            return quantized_weighted_average(
+                stacked, weights, self.cfg.quant_bits,
+                mode=self.cfg.quant_kernel)
+        return weighted_average(stacked, weights)
+
+    # -- fixed-shape training dispatch -----------------------------------
+    def _train_cohort(self, sel: List[int], epochs, prox: bool = False):
+        """Train ``sel`` inside a padded cohort of static width
+        ``cfg.clients_per_round``.
+
+        Pad slots replay client 0 with a dummy key and get weight 0, so
+        they vanish from the aggregate; the dispatch shape never changes,
+        so the trainer compiles once per configuration. Returns
+        (stacked trained params (W, ...), aggregation weights (W,))."""
+        cfg = self.cfg
+        W, m = cfg.clients_per_round, len(sel)
+        ks = jax.random.split(self.key, m + 1)
+        self.key = ks[0]
+        keys = np.empty((W,) + ks.shape[1:], dtype=np.asarray(ks).dtype)
+        keys[:m] = np.asarray(ks[1:])
+        keys[m:] = keys[0]
+        idx = np.zeros(W, np.int64)
+        idx[:m] = sel
+        ep = np.ones(W, np.int32)
+        ep[:m] = epochs
+        tx_global = self._tx_global()
+        stacked = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (W,) + p.shape), tx_global)
+        gather = jnp.asarray(idx)
+        trained = local_sgd_clients(
+            cfg.model, stacked, self.ds.x[gather], self.ds.y[gather],
+            jnp.asarray(keys), ep, cfg.batch_size, cfg.lr,
+            mu=cfg.prox_mu if prox else 0.0,
+            global_params=tx_global if prox else None)
+        n_k = np.zeros(W, np.float64)
+        n_k[:m] = self.ds.n_per_client
+        return trained, n_k
+
     # -- evaluation ------------------------------------------------------
     def evaluate(self) -> float:
         return accuracy(self.apply_fn, self.global_params,
@@ -186,17 +281,10 @@ class FedAvgSat(SpaceifiedFL):
         sel = self._select_from_projections(proj)
         if not sel:
             return None
-        # train selected clients (vmapped, same epoch count: synchronous)
-        self.key, *keys = jax.random.split(self.key, len(sel) + 1)
-        stacked = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (len(sel),) + p.shape),
-            self.global_params)
-        xs, ys = self.ds.x[jnp.array(sel)], self.ds.y[jnp.array(sel)]
-        trained = local_sgd_clients(cfg.model, stacked, xs, ys,
-                                    jnp.stack(keys), cfg.epochs,
-                                    cfg.batch_size, cfg.lr)
-        n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
-        self.global_params = weighted_average(trained, n_k)
+        # train selected clients (padded cohort, same epoch count:
+        # synchronous)
+        trained, n_k = self._train_cohort(sel, cfg.epochs)
+        self.global_params = self._aggregate(trained, n_k)
 
         ks = np.asarray(sel)
         ends = proj["ret_avail"][ks] + self._t_down()
@@ -216,7 +304,12 @@ class FedAvgSat(SpaceifiedFL):
 class FedProxSat(SpaceifiedFL):
     """Algorithm 3: partial updates — each client trains until it reaches a
     ground station; a proximal term bounds local drift. V2 (min_epochs>0)
-    enforces a minimum-epoch floor before returning (paper §5.1.1)."""
+    enforces a minimum-epoch floor before returning (paper §5.1.1).
+
+    Per-client epoch budgets come from ONE batched floor projection over
+    the contact plan; a selected client whose floor-epoch return contact
+    never materializes is dropped from the round (the round only fails if
+    nobody can return)."""
 
     name = "fedprox"
 
@@ -225,55 +318,40 @@ class FedProxSat(SpaceifiedFL):
         sel = self.select_clients(t)
         if not sel:
             return None
-        self.key, *keys = jax.random.split(self.key, len(sel) + 1)
-        ends, idles, comms, trains, epoch_list = [], [], [], [], []
-        plans = []
-        for k in sel:
-            w = self.plan.next_contact(k, t)
-            recv_end = w[0] + self._t_up()
-            floor_end = recv_end + self.hw.train_time(max(cfg.min_epochs, 1))
-            if cfg.selection == "intra_sl":
-                ret = self.plan.next_cluster_contact(k, floor_end)
-                ret = (ret[0], ret[1], ret[2]) if ret else None
-            else:
-                ret = self.plan.next_contact(k, floor_end)
-            if ret is None:
-                return None
-            epochs = int((ret[0] - recv_end) // self.hw.epoch_time_s)
-            epochs = int(np.clip(epochs, max(cfg.min_epochs, 1),
-                                 cfg.max_local_epochs))
-            train_end = recv_end + self.hw.train_time(epochs)
-            plans.append((k, epochs))
-            up_end = ret[0] + self._t_down()
-            ends.append(up_end)
-            idles.append((w[0] - t) + max(ret[0] - train_end, 0.0))
-            comms.append(self._t_up() + self._t_down())
-            trains.append(train_end - recv_end)
-            epoch_list.append(epochs)
-        xs, ys = self.ds.x[jnp.array(sel)], self.ds.y[jnp.array(sel)]
-        stacked = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (len(sel),) + p.shape),
-            self.global_params)
-        trained = local_sgd_clients(
-            cfg.model, stacked, xs, ys, jnp.stack(keys),
-            jnp.asarray(epoch_list, jnp.int32), cfg.batch_size, cfg.lr,
-            mu=cfg.prox_mu, global_params=self.global_params)
-        n_k = np.full(len(sel), self.ds.n_per_client, np.float64)
-        self.global_params = weighted_average(trained, n_k)
-        t_round_end = max(ends)
+        floor_ep = max(cfg.min_epochs, 1)
+        projf = self._projected_returns(t, floor_ep)
+        sel = [k for k in sel if projf["valid"][k]]
+        if not sel:
+            return None
+        ks = np.asarray(sel)
+        recv_end = projf["recv_end"][ks]
+        ep = np.clip(((projf["ret_avail"][ks] - recv_end)
+                      // self.hw.epoch_time_s).astype(np.int64),
+                     floor_ep, cfg.max_local_epochs).astype(np.int32)
+        train_end = recv_end + self.hw.train_time(1) * ep
+        trained, n_k = self._train_cohort(sel, ep, prox=True)
+        self.global_params = self._aggregate(trained, n_k)
+
+        ends = projf["ret_avail"][ks] + self._t_down()
+        idles = (projf["contact_avail"][ks] - t) \
+            + np.maximum(projf["ret_avail"][ks] - train_end, 0.0)
+        comms = np.full(len(sel), self._t_up() + self._t_down())
+        trains = train_end - recv_end
+        t_round_end = float(ends.max())
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
         return RoundRecord(r, t, t_round_end, t_round_end - t,
                            float(np.mean(idles)), float(np.mean(comms)),
                            float(np.mean(trains)), acc, sel,
-                           epochs=float(np.mean(epoch_list)))
+                           epochs=float(np.mean(ep)))
 
 
 class FedBuffSat(SpaceifiedFL):
     """Algorithm 4: asynchronous buffered aggregation. Clients train
     continuously between ground contacts (near-zero idle, paper Fig. 5c);
     the server folds in updates with staleness discounting and completes a
-    "round" when the buffer reaches D updates."""
+    "round" when the buffer reaches D updates. The flush is one stacked
+    delta reduction (``apply_buffered_deltas``) over the whole buffer."""
 
     name = "fedbuff"
 
@@ -301,7 +379,7 @@ class FedBuffSat(SpaceifiedFL):
             ep = int(np.clip((ret[0] - recv_end) // hw.epoch_time_s, 1,
                              cfg.max_local_epochs))
             heapq.heappush(heap, (ret[0] + self._t_down(), k))
-            client_params[k] = self.global_params
+            client_params[k] = self._tx_global()
             pickup_round[k] = 0
             epochs_of[k] = ep
             idle_of[k] = max(ret[0] - (recv_end + ep * hw.epoch_time_s), 0.0)
@@ -318,11 +396,11 @@ class FedBuffSat(SpaceifiedFL):
                                 self.ds.y[k], sub, epochs_of[k],
                                 cfg.batch_size, cfg.lr, cfg.prox_mu, True,
                                 client_params[k])
+            if cfg.quant_bits:      # the returned model crosses the radio
+                trained = quantize_roundtrip(trained, cfg.quant_bits)
             stale = r - pickup_round[k]
             wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
-            delta = jax.tree.map(lambda a, b: (a - b) * wgt, trained,
-                                 client_params[k])
-            buf.append(delta)
+            buf.append((trained, client_params[k], wgt))
             comm_acc += self._t_up() + self._t_down()
             train_acc += epochs_of[k] * hw.epoch_time_s
             idle_acc += idle_of.get(k, 0.0)
@@ -334,17 +412,20 @@ class FedBuffSat(SpaceifiedFL):
                 ep = int(np.clip((nxt[0] - recv_end) // hw.epoch_time_s, 1,
                                  cfg.max_local_epochs))
                 heapq.heappush(heap, (nxt[0] + self._t_down(), k))
-                client_params[k] = self.global_params
+                client_params[k] = self._tx_global()
                 pickup_round[k] = r
                 epochs_of[k] = ep
                 idle_of[k] = max(nxt[0] - (recv_end + ep * hw.epoch_time_s),
                                  0.0)
 
             if len(buf) >= cfg.buffer_size:
-                mean_delta = jax.tree.map(
-                    lambda *ds: sum(ds) / len(ds), *buf)
-                self.global_params = jax.tree.map(
-                    lambda p, dlt: p + dlt, self.global_params, mean_delta)
+                stacked_new = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                           *[b[0] for b in buf])
+                stacked_base = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                            *[b[1] for b in buf])
+                wgts = jnp.asarray([b[2] for b in buf], jnp.float32)
+                self.global_params = apply_buffered_deltas(
+                    self.global_params, stacked_new, stacked_base, wgts)
                 buf = []
                 acc = self.evaluate() if r % cfg.eval_every == 0 else \
                     (self.records[-1].accuracy if self.records else 0.0)

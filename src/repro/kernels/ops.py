@@ -10,13 +10,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.quant_agg import quant_agg
+from repro.kernels.quant_agg import quant_agg, quant_agg_stacked
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.swa_attention import swa_attention
 
 
 def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def default_quant_mode() -> str:
+    """Kernel route for the simulator's quantized-aggregation hot path:
+    the compiled (non-interpret) Pallas kernel on TPU, the jnp oracle
+    elsewhere (Pallas interpret mode is for tests, not the hot path)."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
 # ---------------------------------------------------------------------------
@@ -28,6 +35,24 @@ def quantized_weighted_accumulate(acc, q, scale, weight, interpret=None):
     """acc += weight * scale * q, tiled through VMEM. Any shape."""
     interpret = default_interpret() if interpret is None else interpret
     return quant_agg(acc, q, scale, weight, interpret=interpret)
+
+
+_STACKED_REF = jax.jit(ref.quant_agg_stacked_ref)
+
+
+def quantized_stacked_accumulate(acc, q, sw, mode="auto"):
+    """acc + sum_k sw[k] * q[k] for a whole stacked cohort of quantized
+    models. ``mode``: "auto" (pallas on TPU, jnp elsewhere) | "pallas"
+    (compiled) | "pallas_interpret" | "jnp"."""
+    if mode == "auto":
+        mode = default_quant_mode()
+    if mode == "jnp":
+        return _STACKED_REF(acc, q, jnp.asarray(sw, jnp.float32))
+    if mode not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown quant kernel mode {mode!r}; expected "
+                         "'auto', 'pallas', 'pallas_interpret' or 'jnp'")
+    return quant_agg_stacked(acc, q, sw,
+                             interpret=(mode == "pallas_interpret"))
 
 
 def quantized_inplace_aggregate(q_models, scales, weights, interpret=None):
@@ -117,5 +142,6 @@ def swa_flash_attention(q, k, v, window=0, causal=True, bq=128, bk=128,
 
 
 __all__ = ["quantized_weighted_accumulate", "quantized_inplace_aggregate",
-           "ssd_chunked_kernel", "swa_flash_attention", "default_interpret",
+           "quantized_stacked_accumulate", "ssd_chunked_kernel",
+           "swa_flash_attention", "default_interpret", "default_quant_mode",
            "ref"]

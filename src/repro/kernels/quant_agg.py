@@ -61,3 +61,57 @@ def quant_agg(acc, q, scale, weight, interpret=True):
     qf = jnp.pad(qf, (0, pad)).reshape(-1, TILE_SUB, TILE_LANES)
     out = quant_agg_tiles(flat, qf, scale, weight, interpret=interpret)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+def _make_stacked_kernel(n_clients: int):
+    """One grid step owns one (8, 256) output tile; the K client tiles for
+    that position stream through VMEM and the per-client weight*scale
+    products are applied in an unrolled accumulate (K is the static cohort
+    width, so the unroll is bounded and compiles once per config)."""
+    def kernel(acc_ref, q_ref, sw_ref, out_ref):
+        out = acc_ref[...]
+        for k in range(n_clients):
+            out = out + sw_ref[0, k] * q_ref[k].astype(jnp.float32)
+        out_ref[...] = out
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_agg_stacked_tiles(acc, q, sw, interpret=True):
+    """acc (T, 8, L) f32; q (K, T, 8, L) int32; sw (1, K) f32 per-client
+    weight*scale. Returns acc + sum_k sw[k] * q[k]."""
+    t = acc.shape[0]
+    k = q.shape[0]
+    return pl.pallas_call(
+        _make_stacked_kernel(k),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((1, TILE_SUB, TILE_LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((k, 1, TILE_SUB, TILE_LANES),
+                         lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_SUB, TILE_LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(acc.shape, jnp.float32),
+        interpret=interpret,
+    )(acc, q, sw)
+
+
+def quant_agg_stacked(acc, q, sw, interpret=True):
+    """Fused multi-client dequantize + accumulate.
+
+    acc: any-shape f32 accumulator; q: (K,) + acc.shape int32 quantized
+    client models; sw: (K,) f32 per-client ``weight * scale`` products.
+    Returns acc + sum_k sw[k] * q[k] in one pass over the tiles (the
+    server-side aggregation of a whole quantized cohort)."""
+    shape = acc.shape
+    flat = acc.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    k = q.shape[0]
+    qf = q.reshape(k, -1)
+    pad = (-n) % TILE
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, TILE_SUB, TILE_LANES)
+    qf = jnp.pad(qf, ((0, 0), (0, pad))).reshape(k, -1, TILE_SUB, TILE_LANES)
+    swf = jnp.asarray(sw, jnp.float32).reshape(1, k)
+    out = quant_agg_stacked_tiles(flat, qf, swf, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -10,6 +10,15 @@ def quant_agg_ref(acc, q, scale, weight):
     return acc + weight * scale * q.astype(jnp.float32)
 
 
+def quant_agg_stacked_ref(acc, q, sw):
+    """acc + sum_k sw[k] * q[k]: acc any shape, q (K,) + acc.shape int32,
+    sw (K,) f32 per-client weight*scale products."""
+    k = q.shape[0]
+    deq = jnp.asarray(sw, jnp.float32).reshape(k, -1) \
+        * q.reshape(k, -1).astype(jnp.float32)
+    return acc + deq.sum(0).reshape(acc.shape)
+
+
 def ssd_chunk_ref(x, dt, A, B, C):
     """Intra-chunk SSD reference.
 

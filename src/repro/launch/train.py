@@ -77,12 +77,15 @@ def main():
                        donate_argnums=0)
         if args.sync_every == "orbit":
             from repro.core.contact_plan import build_contact_plan
-            from repro.core.aggregation import pytree_bytes
+            from repro.core.quantize import transmit_bytes
             from repro.sim.hardware import SMALLSAT_SBAND
             plan = build_contact_plan(nc, 10, 3, horizon_s=86400.0,
                                       dt_s=60.0, with_isl_pairs=True)
+            # bill the ISL exchange at the same (possibly quantized) wire
+            # size as every other link so the schedule stays consistent
             h_sync = H.sync_interval_from_orbits(
-                plan, SMALLSAT_SBAND, pytree_bytes(state.params) / nc,
+                plan, SMALLSAT_SBAND,
+                transmit_bytes(state.params, args.quant_bits) / nc,
                 step_time_s=1.0)
             print(f"[hfl] ISL schedule => sync every H={h_sync} steps")
         else:

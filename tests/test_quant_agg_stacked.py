@@ -1,0 +1,108 @@
+"""Parity suite for the batched quant_agg kernel path (Pallas interpret vs
+jnp fallback vs quantize_pytree round-trip), including non-tile-multiple
+sizes. Hypothesis-free so it runs even without the optional dev deps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (quantized_weighted_average,
+                                    weighted_average)
+from repro.core.quantize import (dequantize_pytree, quantize_pytree,
+                                 quantize_roundtrip, quantize_stacked)
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,k", [(7, 1), (2048, 3), (2049, 4), (100_003, 2)])
+def test_quant_agg_stacked_interpret_matches_jnp(n, k):
+    """Whole-cohort fused accumulate: Pallas (interpret) vs the jnp oracle,
+    including non-tile-multiple flat sizes."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + k), 3)
+    acc = jax.random.normal(k1, (n,))
+    q = jax.random.randint(k2, (k, n), -127, 127, jnp.int32)
+    sw = jax.random.uniform(k3, (k,), minval=0.0, maxval=0.1)
+    got = ops.quantized_stacked_accumulate(acc, q, sw,
+                                           mode="pallas_interpret")
+    want = ops.quantized_stacked_accumulate(acc, q, sw, mode="jnp")
+    oracle = ref.quant_agg_stacked_ref(acc, q, sw)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(got, oracle, rtol=1e-5, atol=1e-5)
+
+
+def test_quant_agg_stacked_matches_scalar_kernel():
+    """K accumulated one-at-a-time through the original scalar kernel ==
+    one stacked pass."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    acc = jax.random.normal(k1, (517,))
+    q = jax.random.randint(k2, (3, 517), -511, 511, jnp.int32)
+    sw = np.array([0.01, 0.02, 0.005], np.float32)
+    out = acc
+    for i in range(3):
+        out = ops.quantized_weighted_accumulate(out, q[i], float(sw[i]), 1.0,
+                                                interpret=True)
+    got = ops.quantized_stacked_accumulate(acc, q, sw,
+                                           mode="pallas_interpret")
+    np.testing.assert_allclose(got, out, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["pallas_interpret", "jnp"])
+@pytest.mark.parametrize("shape", [(3, 37), (2, 8, 260), (4, 1000)])
+def test_quantized_weighted_average_matches_roundtrip(mode, shape):
+    """The simulation aggregation path == quantize_pytree round-trip then
+    plain weighted average, for every kernel route."""
+    key = jax.random.PRNGKey(shape[-1])
+    stacked = {"w": jax.random.normal(key, shape)}
+    k = shape[0]
+    w = np.arange(1, k + 1, dtype=np.float64)
+    got = quantized_weighted_average(stacked, w, 8, mode=mode)
+    deq = [dequantize_pytree(*quantize_pytree({"w": stacked["w"][i]}, 8))
+           for i in range(k)]
+    want = weighted_average({"w": jnp.stack([d["w"] for d in deq])}, w)
+    np.testing.assert_allclose(got["w"], want["w"], rtol=1e-5, atol=1e-6)
+
+
+def test_quantized_weighted_average_masks_zero_weight_rows():
+    """Padded cohort invariant: zero-weight rows contribute nothing even if
+    their values are extreme."""
+    key = jax.random.PRNGKey(0)
+    real = jax.random.normal(key, (2, 64))
+    junk = jnp.full((1, 64), 1e6)
+    stacked = {"w": jnp.concatenate([real, junk])}
+    got = quantized_weighted_average(stacked, np.array([1.0, 1.0, 0.0]), 8,
+                                     mode="jnp")
+    want = quantized_weighted_average({"w": real}, np.array([1.0, 1.0]), 8,
+                                      mode="jnp")
+    np.testing.assert_allclose(got["w"], want["w"], rtol=1e-6, atol=1e-6)
+
+
+def test_zero_weight_rows_mask_non_finite_values():
+    """A diverged (inf/NaN) pad row with weight 0 must not poison the
+    aggregate — the masking has to be total, not just 0*x."""
+    real = jax.random.normal(jax.random.PRNGKey(2), (2, 40))
+    junk = jnp.full((1, 40), jnp.nan)
+    stacked = {"w": jnp.concatenate([real, junk])}
+    w = np.array([1.0, 1.0, 0.0])
+    plain = weighted_average(stacked, w)
+    want_plain = weighted_average({"w": real}, w[:2])
+    np.testing.assert_array_equal(np.asarray(plain["w"]),
+                                  np.asarray(want_plain["w"]))
+    quant = quantized_weighted_average(stacked, w, 8, mode="jnp")
+    assert np.isfinite(np.asarray(quant["w"])).all()
+
+
+def test_quantize_stacked_rowwise_equals_per_client():
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 33))
+    q, s = quantize_stacked(x, 8)
+    for i in range(4):
+        qi, si = quantize_pytree({"w": x[i]}, 8)
+        np.testing.assert_array_equal(np.asarray(q[i]), np.asarray(qi["w"]))
+        np.testing.assert_allclose(float(s[i]), float(si["w"]), rtol=1e-7)
+
+
+def test_quantize_roundtrip_jit_matches_eager():
+    params = {"a": jax.random.normal(jax.random.PRNGKey(1), (65, 3)),
+              "b": jnp.linspace(-2.0, 2.0, 31)}
+    got = quantize_roundtrip(params, 10)
+    want = dequantize_pytree(*quantize_pytree(params, 10))
+    for k in params:
+        np.testing.assert_allclose(got[k], want[k], rtol=1e-7, atol=1e-7)

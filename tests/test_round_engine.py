@@ -1,0 +1,236 @@
+"""Fixed-shape round engine: golden parity vs the retained pre-change
+engine (repro.core.round_engine_ref), compile-count stability of the padded
+cohort dispatch, the live QuAFL quantized-transmission path, and
+link-billing symmetry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import round_engine_ref as RER
+from repro.core.aggregation import pytree_bytes
+from repro.core.autoflsat import AutoFLSat
+from repro.core.client import clear_train_caches, train_cache_sizes
+from repro.core.contact_plan import ContactPlan, build_contact_plan
+from repro.core.quantize import quantized_bytes, transmit_bytes
+from repro.core.spaceify import (FedAvgSat, FedBuffSat, FedProxSat, FLConfig)
+from repro.data.synthetic import make_federated_dataset
+from repro.orbit.constellation import WalkerStar
+from repro.sim.hardware import HardwareProfile, SMALLSAT_SBAND
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_contact_plan(2, 3, 2, horizon_s=0.8 * 86400, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_dataset("femnist", 6, 32)
+
+
+def _cfg(**kw):
+    base = dict(model="mlp", clients_per_round=4, epochs=2, batch_size=16,
+                max_rounds=5, max_local_epochs=6, buffer_size=3)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _timings(recs):
+    return [(r.t_start, r.t_end, r.duration_s, r.idle_s, r.comm_s,
+             r.train_s, r.epochs, r.accuracy) for r in recs]
+
+
+def _bitwise_equal(a, b):
+    return all((np.asarray(x) == np.asarray(y)).all()
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y)))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# golden parity vs the pre-change engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cls,ref_cls", [
+    (FedAvgSat, RER.FedAvgSatRef),
+    (FedProxSat, RER.FedProxSatRef),
+])
+def test_padded_engine_matches_unpadded(plan, ds, cls, ref_cls):
+    new = cls(plan, SMALLSAT_SBAND, ds, _cfg())
+    recs_new = new.run()
+    ref = ref_cls(plan, SMALLSAT_SBAND, ds, _cfg())
+    recs_ref = ref.run()
+    assert len(recs_new) == len(recs_ref) >= 3
+    assert [r.participants for r in recs_new] == \
+        [r.participants for r in recs_ref]
+    assert _timings(recs_new) == _timings(recs_ref)
+    # quant_bits=0: masked zero-weight slots are an IEEE no-op => bitwise
+    assert _bitwise_equal(new.global_params, ref.global_params)
+
+
+def test_autoflsat_batched_matches_ref(plan, ds):
+    new = AutoFLSat(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=3))
+    recs_new = new.run()
+    ref = RER.AutoFLSatRef(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=3))
+    recs_ref = ref.run()
+    assert len(recs_new) == len(recs_ref) >= 2
+    assert [t[:7] for t in _timings(recs_new)] == \
+        [t[:7] for t in _timings(recs_ref)]
+    assert _max_diff(new.global_params, ref.global_params) < 1e-5
+    assert [r.accuracy for r in recs_new] == [r.accuracy for r in recs_ref]
+
+
+def test_fedbuff_stacked_flush_matches_ref(plan, ds):
+    new = FedBuffSat(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=4))
+    recs_new = new.run()
+    ref = RER.FedBuffSatRef(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=4))
+    recs_ref = ref.run()
+    assert len(recs_new) == len(recs_ref) >= 2
+    assert [t[:7] for t in _timings(recs_new)] == \
+        [t[:7] for t in _timings(recs_ref)]
+    assert _max_diff(new.global_params, ref.global_params) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# compile-count stability
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_width_fluctuation_compiles_once(plan, ds):
+    """Fluctuating per-round eligibility must not grow the jit cache: the
+    padded engine traces local_sgd_clients once per (model, batch_size,
+    mu_on, width) config, the unpadded reference once per cohort size."""
+    clear_train_caches()
+    algo = FedAvgSat(plan, SMALLSAT_SBAND, ds, _cfg())
+    recs = algo.run()
+    widths = {len(r.participants) for r in recs}
+    assert len(widths) >= 2          # eligibility really fluctuated
+    assert train_cache_sizes()["local_sgd_clients"] == 1
+
+    RER.clear_ref_trace_count()
+    ref = RER.FedAvgSatRef(plan, SMALLSAT_SBAND, ds, _cfg())
+    ref.run()
+    assert RER.ref_trace_count() == len(widths)
+
+
+def test_fedprox_varying_epochs_compile_once(plan, ds):
+    """Orbit-derived epoch budgets fluctuate round to round; epochs are a
+    dynamic argument so the padded trainer still compiles exactly once."""
+    slow_compute = HardwareProfile(
+        name="slow_compute", epoch_time_s=600.0,
+        downlink_rate_bps=1e6 * 8, uplink_rate_bps=0.5e6 * 8,
+        isl_rate_bps=20e3 * 8)
+    clear_train_caches()
+    algo = FedProxSat(plan, slow_compute, ds, _cfg(max_local_epochs=10))
+    recs = algo.run()
+    assert len(recs) >= 3
+    assert len({r.epochs for r in recs}) >= 2    # per-round epoch budgets
+    assert train_cache_sizes()["local_sgd_clients"] == 1
+
+
+# ---------------------------------------------------------------------------
+# FedProxSat: drop unreturnable clients instead of aborting the round
+# ---------------------------------------------------------------------------
+
+
+def _two_sat_plan():
+    """Sat 0 can return (a second pass at t=5000); sat 1 has only the
+    initial pass, so any training floor past its end leaves no return."""
+    c = WalkerStar(1, 2)
+    return ContactPlan(
+        constellation=c, horizon_s=10_000.0,
+        sat_windows=[[(0.0, 100.0, 0), (5000.0, 5100.0, 0)],
+                     [(0.0, 100.0, 0)]],
+        cluster_of=np.array([0, 0]), pair_windows={})
+
+
+_FAST_HW = HardwareProfile(name="fast", epoch_time_s=50.0,
+                           downlink_rate_bps=8e9, uplink_rate_bps=8e9,
+                           isl_rate_bps=8e9)
+
+
+def test_fedprox_drops_unreturnable_client():
+    plan2 = _two_sat_plan()
+    ds2 = make_federated_dataset("femnist", 2, 16)
+    cfg = _cfg(clients_per_round=2, epochs=1, min_epochs=4, batch_size=8,
+               max_rounds=1, max_local_epochs=30)
+    algo = FedProxSat(plan2, _FAST_HW, ds2, cfg)
+    recs = algo.run()
+    assert len(recs) == 1
+    assert recs[0].participants == [0]     # sat 1 dropped, round survives
+    # the seed engine aborted the whole round on the same scenario
+    ref = RER.FedProxSatRef(plan2, _FAST_HW, ds2, cfg)
+    assert ref.run() == []
+
+
+def test_fedprox_ends_only_when_nobody_returns():
+    plan2 = _two_sat_plan()
+    ds2 = make_federated_dataset("femnist", 2, 16)
+    # floor training outlives BOTH sats' return options => simulation ends
+    cfg = _cfg(clients_per_round=2, epochs=1, min_epochs=4, batch_size=8,
+               max_rounds=2, max_local_epochs=30)
+    algo = FedProxSat(plan2, _FAST_HW, ds2, cfg)
+    algo.run(t0=4000.0)                    # only the t=5000 pass remains
+    # sat 0 trains, returns... then no contacts remain: sim ends cleanly
+    assert len(algo.records) <= 1
+
+
+# ---------------------------------------------------------------------------
+# live quantized transmission path (QuAFL) through quant_agg
+# ---------------------------------------------------------------------------
+
+
+def test_quant_sim_path_exercises_quant_agg(plan, ds):
+    """quant_bits>0 must change the trained model (compression is live) and
+    the Pallas quant_agg kernel (interpret) must agree with the jnp route
+    through a REAL multi-round simulation, not just unit shapes."""
+    run = {}
+    for mode in ("jnp", "pallas_interpret"):
+        algo = FedAvgSat(plan, SMALLSAT_SBAND, ds,
+                         _cfg(max_rounds=3, quant_bits=8, quant_kernel=mode))
+        algo.run()
+        run[mode] = algo.global_params
+    assert _max_diff(run["jnp"], run["pallas_interpret"]) < 1e-5
+
+    full = FedAvgSat(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=3))
+    full.run()
+    assert _max_diff(full.global_params, run["jnp"]) > 1e-6
+
+
+def test_quant_roundtrip_error_visible_but_bounded(plan, ds):
+    """8-bit QuAFL should perturb but not destroy convergence."""
+    q = FedAvgSat(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=4, quant_bits=8))
+    q.run()
+    f = FedAvgSat(plan, SMALLSAT_SBAND, ds, _cfg(max_rounds=4))
+    f.run()
+    assert q.records[-1].accuracy > 0.5 * f.records[-1].accuracy
+
+
+# ---------------------------------------------------------------------------
+# link-billing symmetry (GS vs ISL wire format)
+# ---------------------------------------------------------------------------
+
+
+def test_tx_bytes_symmetric_across_link_types(plan, ds):
+    cfg = _cfg(quant_bits=8)
+    for cls in (FedAvgSat, FedBuffSat, AutoFLSat):
+        algo = cls(plan, SMALLSAT_SBAND, ds, cfg)
+        want = quantized_bytes(algo.global_params, 8)
+        assert algo.tx_bytes == want
+        # ISL billing (AutoFLSat scheduler) uses the same wire size
+        assert algo.hw.tx_time(algo.tx_bytes, "isl") == \
+            want * 8.0 / algo.hw.isl_rate_bps
+    full = FedAvgSat(plan, SMALLSAT_SBAND, ds, _cfg(quant_bits=0))
+    assert full.tx_bytes == pytree_bytes(full.global_params, 32)
+    assert transmit_bytes(full.global_params, 0) == full.tx_bytes
+    assert transmit_bytes(full.global_params, 8) < 0.3 * full.tx_bytes

@@ -115,5 +115,20 @@ def segment_mean(stacked_params, n_segments: int):
     return jax.tree.map(f, stacked_params)
 
 
+@partial(jax.jit, static_argnames=("n_segments",))
+def segment_weighted_mean(stacked_params, weights, n_segments: int):
+    """``segment_mean`` with per-row weights (K,): zero-weight rows — e.g.
+    satellites masked out by the battery floor — are excluded from their
+    segment's mean. A segment whose weights are all zero yields zeros;
+    callers must give such segments zero weight downstream."""
+    def f(leaf):
+        seg = leaf.reshape((n_segments, -1) + leaf.shape[1:])
+        w = weights.reshape((n_segments, -1) + (1,) * (leaf.ndim - 1))
+        num = jnp.where(w > 0, seg.astype(jnp.float32) * w, 0.0).sum(1)
+        den = jnp.maximum(w.sum(1), 1e-9)
+        return (num / den).astype(leaf.dtype)
+    return jax.tree.map(f, stacked_params)
+
+
 def pytree_bytes(params, bits=32):
     return sum(p.size for p in jax.tree_util.tree_leaves(params)) * bits / 8

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aggregation import segment_mean
+from repro.core.aggregation import segment_mean, segment_weighted_mean
 from repro.core.client import local_sgd_clients
 from repro.core.contact_plan import ContactPlan
 from repro.core.quantize import quantize_roundtrip_stacked
@@ -80,6 +80,14 @@ class AutoFLSat(SpaceifiedFL):
         C = self.n_clusters
         spc = plan.constellation.sats_per_cluster
 
+        # battery gating: sats below the SoC floor sit the round out (zero
+        # weight in the cluster mean; the K-wide dispatch shape is fixed
+        # either way, so nothing retraces)
+        energy_ok = None
+        if self.energy is not None:
+            self.energy.advance_to(t)
+            energy_ok = self.energy.eligible()
+
         # tier 1: synchronous intra-cluster FL (all satellites participate)
         # as ONE (C*spc)-wide vmapped dispatch + a segment-wise cluster
         # aggregation — no per-cluster Python loop, so the trainer compiles
@@ -100,14 +108,29 @@ class AutoFLSat(SpaceifiedFL):
             keys, e, cfg.batch_size, cfg.lr)
         if cfg.quant_bits:                   # member -> cluster-head return
             trained = quantize_roundtrip_stacked(trained, cfg.quant_bits)
-        stacked_clusters = segment_mean(trained, C)
 
         # tier 2: all-to-all exchange -> constellation-wide model (the
         # exchanged cluster models cross ISLs quantized when quant_bits>0)
-        self.global_params = self._aggregate(
-            stacked_clusters, np.full(C, float(spc)))
-        self.cluster_params = jax.tree.map(
-            lambda g: jnp.broadcast_to(g, (C,) + g.shape), self.global_params)
+        if energy_ok is None:
+            stacked_clusters = segment_mean(trained, C)
+            self.global_params = self._aggregate(
+                stacked_clusters, np.full(C, float(spc)))
+            self.cluster_params = jax.tree.map(
+                lambda g: jnp.broadcast_to(g, (C,) + g.shape),
+                self.global_params)
+        else:
+            w = energy_ok.astype(np.float64)
+            seg_w = w.reshape(C, spc).sum(1)   # eligible sats per cluster
+            if seg_w.sum() > 0:
+                stacked_clusters = segment_weighted_mean(
+                    trained, jnp.asarray(w, jnp.float32), C)
+                # clusters with no eligible members carry zero tier-2 weight
+                self.global_params = self._aggregate(stacked_clusters, seg_w)
+                self.cluster_params = jax.tree.map(
+                    lambda g: jnp.broadcast_to(g, (C,) + g.shape),
+                    self.global_params)
+            # else: the whole fleet is below the floor — models unchanged,
+            # the round still advances time (the exchange slots were spent)
 
         # timing: training overlaps the exchange chain; the round ends when
         # both the last pairwise pass and local training are done.
@@ -116,6 +139,17 @@ class AutoFLSat(SpaceifiedFL):
         t_train_done = t + train_time + intra_comm
         t_round_end = max(sched.t_complete, t_train_done)
         idle = max(t_round_end - t_train_done, 0.0)
+        K = plan.constellation.n_sats
+        participants = list(range(K))
+        wh, skipped = 0.0, 0
+        if energy_ok is not None:
+            participants = [k for k in range(K) if energy_ok[k]]
+            skipped = K - len(participants)
+            self.energy.advance_to(t_round_end)
+            n = len(participants)
+            wh = self.energy.bill_activity(
+                np.asarray(participants, np.int64),
+                np.full(n, train_time), np.full(n, intra_comm)) if n else 0.0
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
         # cluster-model divergence (paper §5.2): per-cluster accuracies
@@ -123,6 +157,6 @@ class AutoFLSat(SpaceifiedFL):
                            intra_comm * 2
                            + len(sched.passes)
                            * self.hw.tx_time(self.tx_bytes, "isl") * 2.0 / max(C, 1),
-                           train_time, acc,
-                           list(range(plan.constellation.n_sats)),
-                           epochs=float(e))
+                           train_time, acc, participants,
+                           epochs=float(e), energy_wh=wh,
+                           skipped_low_power=skipped)

@@ -46,6 +46,17 @@ aggregated with ``quantized_weighted_average``, which routes the
 dequantize+accumulate through the ``quant_agg`` Pallas kernel (compiled on
 TPU, jnp fallback elsewhere; ``cfg.quant_kernel`` overrides).
 
+Energy gating (``FLConfig.energy``)
+-----------------------------------
+With an ``EnergyConfig`` set, every algorithm consults a battery
+state-of-charge simulation (``repro.sim.energy.EnergySim``: solar input
+masked by the eclipse series, idle draw, per-round FL activity billing).
+Satellites below the SoC floor at selection time are ANDed out of the
+contact-plan projection's validity mask — exactly like a satellite with no
+remaining contact window — so they become zero-weight pad slots and the
+fixed-shape dispatch never retraces. ``energy=None`` (the default) skips
+every energy code path and is bitwise-identical to the pre-energy engine.
+
 Reproduce the benchmark:
     PYTHONPATH=src python benchmarks/round_engine_perf.py \
         --out BENCH_round_engine.json
@@ -69,11 +80,15 @@ from repro.core.client import local_sgd, local_sgd_clients
 from repro.core.contact_plan import ContactPlan
 from repro.core.quantize import quantize_roundtrip, transmit_bytes
 from repro.models.small import MODELS, accuracy
+from repro.sim.energy import EnergyConfig, EnergySim
 from repro.sim.hardware import HardwareProfile
 
 
 @dataclasses.dataclass
 class RoundRecord:
+    """One completed FL round's bookkeeping (a ``SimResult`` is a list of
+    these). ``energy_wh`` / ``skipped_low_power`` stay at their defaults
+    when energy modeling is off (``FLConfig.energy is None``)."""
     round: int
     t_start: float
     t_end: float
@@ -84,10 +99,65 @@ class RoundRecord:
     accuracy: float
     participants: List[int]
     epochs: float = 0.0
+    energy_wh: float = 0.0     # added FL energy billed this round (fleet sum)
+    # orbit-eligible sats masked by the battery floor this round — a fleet
+    # health gauge: it counts every masked candidate, whether or not the
+    # cohort would have selected it
+    skipped_low_power: int = 0
 
 
 @dataclasses.dataclass
 class FLConfig:
+    """Knobs of the space-ified FL suite.
+
+    Model / optimization
+        ``model``: key in ``repro.models.small.MODELS`` ("cnn" | "mlp").
+        ``epochs``: local epochs per round (E). FedAvg trains exactly E;
+        FedProx treats E as the target and derives per-client budgets from
+        the contact plan. ``batch_size`` / ``lr``: local SGD minibatch and
+        step size. ``prox_mu``: FedProx proximal coefficient (ignored by
+        FedAvg). ``min_epochs``: FedProxSchV2's floor — a client must fit
+        at least this many epochs before its return contact or it is
+        dropped from the round. ``max_local_epochs``: hard cap on orbit-
+        derived budgets ("excessive epochs damage convergence", paper §6).
+
+    Cohorts / rounds
+        ``clients_per_round``: static cohort width C. The fixed-shape
+        engine pads every round's dispatch to exactly C slots (unused
+        slots get weight 0), so the trainer compiles once per config.
+        ``buffer_size``: FedBuff's D — updates buffered before a flush.
+        ``staleness_exponent``: FedBuff discount (1+staleness)^-a.
+        ``max_rounds``: stop after this many rounds (or at horizon end).
+        ``eval_every``: evaluate global accuracy every Nth round (other
+        rounds carry the last value forward).
+
+    Client selection
+        ``selection``: "first_contact" (first C idle clients to reach a
+        ground station), "scheduled" (FLSchedule, Alg. 5: smallest
+        contact+return total), or "intra_sl" (FLIntraSL, Alg. 6: weights
+        may return via any same-plane peer).
+
+    Transmission (QuAFL, PR 2)
+        ``quant_bits``: 0 transmits float32; >0 quantizes every model
+        crossing a link to that many bits per weight (per-tensor scale) —
+        broadcasts are round-tripped through ``quantize_roundtrip`` so
+        clients train on what the radio actually delivered, and link
+        billing uses the compressed wire size. ``quant_kernel`` routes the
+        server's dequantize+accumulate: "auto" (Pallas on TPU, jnp
+        elsewhere) | "pallas" | "pallas_interpret" | "jnp".
+
+    Energy (this PR)
+        ``energy``: ``repro.sim.energy.EnergyConfig`` enabling battery
+        state-of-charge gating — satellites below the SoC floor at
+        selection time are masked out (an extra eligibility mask on the
+        contact-plan projection; the padded dispatch shape is unchanged,
+        so nothing retraces) and each round bills the participants'
+        training/radio energy. ``None`` (default) disables energy
+        modeling entirely and is guaranteed bitwise-identical to the
+        pre-energy engine.
+
+    ``seed`` drives the PRNG key stream for init + minibatch order.
+    """
     model: str = "cnn"
     clients_per_round: int = 10          # C (static cohort width)
     epochs: int = 2                      # E (FedAvg; cap for FedProx)
@@ -106,6 +176,7 @@ class FLConfig:
     max_rounds: int = 500
     seed: int = 0
     eval_every: int = 1
+    energy: Optional[EnergyConfig] = None   # battery SoC gating (off = None)
 
 
 def _model_tx_bytes(params, cfg: FLConfig) -> float:
@@ -128,6 +199,11 @@ class SpaceifiedFL:
         self.tx_bytes = _model_tx_bytes(self.global_params, cfg)
         self.records: List[RoundRecord] = []
         self._tx_cache = self._tx_cache_src = None
+        # battery SoC gating (FLConfig.energy); None => engine is bitwise
+        # identical to the pre-energy path (nothing below ever consults it)
+        self.energy: Optional[EnergySim] = None
+        if cfg.energy is not None:
+            self.energy = EnergySim.for_plan(plan, hw, cfg.energy)
 
     # -- timing helpers -------------------------------------------------
     def _t_up(self):
@@ -168,10 +244,20 @@ class SpaceifiedFL:
         else:
             r_avail, r_end, r_gs, r_valid = plan.next_contacts(train_end)
             relay = np.arange(len(r_avail))
+        orbit_valid = valid & r_valid
+        if self.energy is not None:
+            # battery gating: SoC at selection time must clear the floor.
+            # advance_to is idempotent at equal t, so the repeated
+            # projections FedProx makes within one round stay consistent.
+            self.energy.advance_to(float(t))
+            energy_ok = self.energy.eligible()
+        else:
+            energy_ok = np.ones(len(orbit_valid), bool)
         return {"contact_avail": avail, "contact_end": end, "contact_gs": gs,
                 "recv_end": recv_end, "train_end": train_end,
                 "ret_avail": r_avail, "ret_end": r_end, "ret_gs": r_gs,
-                "relay": relay, "valid": valid & r_valid}
+                "relay": relay, "valid": orbit_valid & energy_ok,
+                "orbit_valid": orbit_valid, "energy_ok": energy_ok}
 
     def _select_from_projections(self, proj) -> List[int]:
         cfg = self.cfg
@@ -245,6 +331,25 @@ class SpaceifiedFL:
         n_k[:m] = self.ds.n_per_client
         return trained, n_k
 
+    # -- energy accounting ----------------------------------------------
+    def _post_recovery_contact(self, k: int, t: float):
+        """Stand-down policy for a drained satellite: its earliest GS
+        contact at/after battery recovery (idle + solar only), or None if
+        the battery never clears the floor within the horizon."""
+        rt = self.energy.recover_time(k)
+        return None if rt is None else self.plan.next_contact(k, max(rt, t))
+
+    def _round_energy(self, proj, ks, trains, comms, t_round_end):
+        """Advance the fleet's batteries to the round end (idle draw +
+        solar input for everyone) and bill the participants' added FL
+        energy. Returns (energy_wh, skipped_low_power) — (0.0, 0) when
+        energy modeling is off."""
+        if self.energy is None:
+            return 0.0, 0
+        skipped = int(np.sum(proj["orbit_valid"] & ~proj["energy_ok"]))
+        self.energy.advance_to(t_round_end)
+        return self.energy.bill_activity(ks, trains, comms), skipped
+
     # -- evaluation ------------------------------------------------------
     def evaluate(self) -> float:
         return accuracy(self.apply_fn, self.global_params,
@@ -293,12 +398,14 @@ class FedAvgSat(SpaceifiedFL):
         comms = np.full(len(sel), self._t_up() + self._t_down())
         trains = proj["train_end"][ks] - proj["recv_end"][ks]
         t_round_end = float(ends.max())
+        wh, skipped = self._round_energy(proj, ks, trains, comms, t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
         return RoundRecord(r, t, t_round_end, t_round_end - t,
                            float(np.mean(idles)), float(np.mean(comms)),
                            float(np.mean(trains)), acc, sel,
-                           epochs=cfg.epochs)
+                           epochs=cfg.epochs, energy_wh=wh,
+                           skipped_low_power=skipped)
 
 
 class FedProxSat(SpaceifiedFL):
@@ -338,12 +445,15 @@ class FedProxSat(SpaceifiedFL):
         comms = np.full(len(sel), self._t_up() + self._t_down())
         trains = train_end - recv_end
         t_round_end = float(ends.max())
+        wh, skipped = self._round_energy(projf, ks, trains, comms,
+                                         t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
         return RoundRecord(r, t, t_round_end, t_round_end - t,
                            float(np.mean(idles)), float(np.mean(comms)),
                            float(np.mean(trains)), acc, sel,
-                           epochs=float(np.mean(ep)))
+                           epochs=float(np.mean(ep)), energy_wh=wh,
+                           skipped_low_power=skipped)
 
 
 class FedBuffSat(SpaceifiedFL):
@@ -368,8 +478,17 @@ class FedBuffSat(SpaceifiedFL):
         pickup_round: Dict[int, int] = {}
         epochs_of: Dict[int, int] = {}
         idle_of: Dict[int, float] = {}      # gap between train-end and return
+        elig = None
+        if self.energy is not None:
+            self.energy.advance_to(t0)
+            elig = self.energy.eligible()
         for k in range(K):
-            w = plan.next_contact(k, t0)
+            if elig is not None and not elig[k]:
+                # below the SoC floor at kickoff: stand down until idle +
+                # solar recovers the battery, then join at the next contact
+                w = self._post_recovery_contact(k, t0)
+            else:
+                w = plan.next_contact(k, t0)
             if w is None:
                 continue
             recv_end = w[0] + self._t_up()
@@ -387,6 +506,7 @@ class FedBuffSat(SpaceifiedFL):
         buf, r = [], 0
         t_round_start = t0
         idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
+        energy_acc, skip_acc = 0.0, 0
         while heap and r < max_rounds:
             t_ret, k = heapq.heappop(heap)
             if t_ret > t_end:
@@ -407,7 +527,24 @@ class FedBuffSat(SpaceifiedFL):
             n_ev += 1
             # client immediately picks up the current global and continues
             recv_end = t_ret + self._t_up()
-            nxt = plan.next_contact(k, recv_end + hw.epoch_time_s)
+            requeue = True
+            if self.energy is not None:
+                self.energy.advance_to(t_ret)
+                energy_acc += self.energy.bill_activity(
+                    np.array([k]),
+                    np.array([epochs_of[k] * hw.epoch_time_s]),
+                    np.array([self._t_up() + self._t_down()]))
+                if not self.energy.eligible()[k]:
+                    # drained below the floor: stand down until idle+solar
+                    # recovers, then rejoin at the next contact after that
+                    skip_acc += 1
+                    w2 = self._post_recovery_contact(k, recv_end)
+                    if w2 is None:
+                        requeue = False     # never recovers: drops out
+                    else:
+                        recv_end = w2[0] + self._t_up()
+            nxt = plan.next_contact(k, recv_end + hw.epoch_time_s) \
+                if requeue else None
             if nxt is not None:
                 ep = int(np.clip((nxt[0] - recv_end) // hw.epoch_time_s, 1,
                                  cfg.max_local_epochs))
@@ -434,9 +571,11 @@ class FedBuffSat(SpaceifiedFL):
                     r, t_round_start, t_ret, dur,
                     idle_acc / max(n_ev, 1),
                     comm_acc / max(n_ev, 1), train_acc / max(n_ev, 1),
-                    acc, [], epochs=float(np.mean(list(epochs_of.values())))))
+                    acc, [], epochs=float(np.mean(list(epochs_of.values()))),
+                    energy_wh=energy_acc, skipped_low_power=skip_acc))
                 t_round_start = t_ret
                 idle_acc = comm_acc = train_acc = 0.0
+                energy_acc, skip_acc = 0.0, 0
                 n_ev = 0
                 r += 1
         return self.records

@@ -62,6 +62,10 @@ def main():
                     help="steps between cluster syncs, or 'orbit' to derive "
                          "from a simulated constellation's ISL schedule")
     ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--power-check", action="store_true",
+                    help="with --hfl --sync-every orbit: report whether the "
+                         "derived schedule's duty cycle fits the eclipse-"
+                         "aware power budget of the simulated constellation")
     args = ap.parse_args()
 
     cfg = build_cfg(args)
@@ -88,6 +92,23 @@ def main():
                 transmit_bytes(state.params, args.quant_bits) / nc,
                 step_time_s=1.0)
             print(f"[hfl] ISL schedule => sync every H={h_sync} steps")
+            if args.power_check:
+                from repro.orbit.eclipse import mean_eclipse_fraction
+                from repro.sim.hardware import oap_added_mw
+                ecl = mean_eclipse_fraction(plan.constellation)
+                hw = SMALLSAT_SBAND
+                tx_s = hw.tx_time(
+                    transmit_bytes(state.params, args.quant_bits) / nc, "isl")
+                duty_tx = min(tx_s / max(h_sync * 1.0, 1e-9), 1.0)
+                oap = oap_added_mw({"training": 1.0 - duty_tx,
+                                    "training_tx": duty_tx}, hw.power)
+                # solar input flows only outside eclipse; idle is always on
+                budget = hw.power_generation_mw * (1.0 - ecl) - hw.power.idle
+                verdict = "OK" if oap <= budget else \
+                    "OVER BUDGET (expect SoC-gated stalls)"
+                print(f"[hfl] power check: eclipse {ecl:.1%}, schedule adds "
+                      f"{oap:.0f} mW vs {budget:.0f} mW sunlit-average "
+                      f"margin => {verdict}")
         else:
             h_sync = int(args.sync_every)
         # each cluster sees its own (non-IID) stream

@@ -1,4 +1,9 @@
 from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.eclipse import (
+    eclipse_fraction,
+    eclipse_series,
+    sun_direction_eci,
+)
 from repro.orbit.groundstations import IGS_STATIONS, gs_ecef
 from repro.orbit.propagate import eci_positions, ecef_positions
 from repro.orbit.visibility import (
@@ -12,4 +17,5 @@ __all__ = [
     "WalkerStar", "satellite_elements", "IGS_STATIONS", "gs_ecef",
     "eci_positions", "ecef_positions", "access_windows",
     "elevation_mask_series", "interplane_los_series", "windows_from_bool",
+    "eclipse_series", "eclipse_fraction", "sun_direction_eci",
 ]

@@ -1,0 +1,87 @@
+"""Earth-shadow (eclipse) geometry for the constellation power budget.
+
+Cylindrical umbra model, the standard LEO power-budget approximation: the
+Sun is taken at infinity, so Earth casts a cylinder of radius ``R_EARTH``
+along the anti-sun direction. A satellite is eclipsed iff it is on the
+anti-sun side of the geocenter AND inside that cylinder:
+
+    proj = r . s_hat < 0           (behind Earth w.r.t. the Sun)
+    |r - proj * s_hat| < R_EARTH   (inside the shadow cylinder)
+
+The Sun direction uses a circular ecliptic: mean longitude advancing at
+2*pi / year from the +x equinox direction, tilted by the 23.44 deg
+obliquity. Penumbra and solar-radius effects (~30 s transition at 500 km)
+are below the access-window grid resolution and are ignored.
+
+Everything is vectorized in JAX and chunked over time exactly like
+``visibility.elevation_mask_series`` so mega-constellations stay in memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbit.constellation import R_EARTH, WalkerStar
+from repro.orbit.propagate import eci_positions
+
+OBLIQUITY_RAD = np.radians(23.44)
+YEAR_S = 365.25 * 86_400.0
+
+# eclipse_series materialises (chunk, K, 3) position blocks; cap the chunk
+# so mega-constellations stay in memory (same convention as visibility).
+_CHUNK_ELEM_BUDGET = 2 ** 25
+
+
+def sun_direction_eci(times):
+    """Unit Sun direction (T, 3) in ECI at ``times`` seconds past epoch.
+
+    Epoch t=0 is the vernal equinox (+x axis); the direction advances
+    through a circular ecliptic inclined by the obliquity.
+    """
+    lam = 2.0 * jnp.pi * jnp.asarray(times) / YEAR_S
+    ce, se = jnp.cos(OBLIQUITY_RAD), jnp.sin(OBLIQUITY_RAD)
+    return jnp.stack([jnp.cos(lam), jnp.sin(lam) * ce, jnp.sin(lam) * se],
+                     axis=-1)
+
+
+def eclipse_series(c: WalkerStar, raan, phase, incl, times,
+                   chunk: int = 8192) -> np.ndarray:
+    """Boolean eclipse series (T, K): sat k inside Earth's umbra at time t."""
+    k = max(int(c.n_sats), 1)
+    chunk = max(1, min(chunk, _CHUNK_ELEM_BUDGET // k))
+
+    @jax.jit
+    def block(ts):
+        pos = eci_positions(c, raan, phase, incl, ts)      # (T, K, 3)
+        s = sun_direction_eci(ts)                          # (T, 3)
+        proj = jnp.einsum("tki,ti->tk", pos, s)            # (T, K)
+        perp = pos - proj[..., None] * s[:, None, :]
+        return (proj < 0.0) & (jnp.linalg.norm(perp, axis=-1) < R_EARTH)
+
+    outs = []
+    times = np.asarray(times)
+    for i in range(0, len(times), chunk):
+        outs.append(np.asarray(block(jnp.asarray(times[i:i + chunk]))))
+    return np.concatenate(outs, axis=0)
+
+
+def eclipse_fraction(c: WalkerStar, raan, phase, incl, times,
+                     chunk: int = 8192) -> np.ndarray:
+    """Per-satellite fraction of ``times`` spent in eclipse, shape (K,)."""
+    ecl = eclipse_series(c, raan, phase, incl, times, chunk=chunk)
+    return ecl.mean(axis=0)
+
+
+def mean_eclipse_fraction(c: WalkerStar, n_orbits: float = 3.0,
+                          dt_s: float = 30.0) -> float:
+    """Fleet-mean eclipse fraction of ``c`` over ``n_orbits`` periods —
+    the scalar that discounts orbital-average solar generation in power
+    budgets (``benchmarks/power.py``, ``launch/train.py --power-check``).
+    """
+    from repro.orbit.constellation import satellite_elements
+    raan, phase, _ = satellite_elements(c)
+    times = np.arange(0.0, n_orbits * c.period_s, dt_s)
+    return float(eclipse_fraction(c, raan, phase,
+                                  np.radians(c.inclination_deg),
+                                  times).mean())

@@ -1,6 +1,8 @@
+from repro.sim.energy import EnergyConfig, EnergySim, mixed_fleet
 from repro.sim.hardware import FLYCUBE, SMALLSAT_SBAND, HardwareProfile, PowerModes
 
 # NOTE: repro.sim.flystack is imported lazily (import the submodule directly)
 # to avoid a circular import with repro.core.spaceify.
 
-__all__ = ["FLYCUBE", "SMALLSAT_SBAND", "HardwareProfile", "PowerModes"]
+__all__ = ["FLYCUBE", "SMALLSAT_SBAND", "HardwareProfile", "PowerModes",
+           "EnergyConfig", "EnergySim", "mixed_fleet"]

@@ -1,0 +1,220 @@
+"""Battery state-of-charge (SoC) simulation for the constellation.
+
+The paper's hardware-aware claim (§4.1.2, Table 2) is a *power* claim:
+FLyCube-class satellites generate ~4 W orbital-average from body-mounted
+panels, and the FL duty cycle adds up to ~2.4 W of load — so whether a
+satellite can take part in a round is decided by its battery, not just its
+orbit. This module turns the static Table 2 arithmetic
+(``repro.sim.hardware.oap_added_mw`` / ``power_feasible``) into a dynamic
+per-satellite battery model:
+
+  * solar input  = ``power_generation_mw`` while the satellite is sunlit
+    (eclipse series from ``repro.orbit.eclipse``, cylindrical umbra);
+  * idle draw    = ``PowerModes.idle`` continuously;
+  * FL activity  = billed as *added* draw above idle when a satellite
+    trains (``PowerModes.training - idle``) or keys its radio
+    (``PowerModes.radio_tx - idle``), for the exact durations the round
+    engine computed from the contact plan;
+  * the SoC is clamped to [0, capacity] every integration step.
+
+``EnergySim`` advances the whole fleet in one vectorized (K,) state and is
+the backing store for the round engines' energy gating
+(``FLConfig.energy``): a satellite whose SoC is below
+``min_soc * capacity`` at selection time is masked out of the round.
+
+Heterogeneous fleets: ``EnergyConfig.fleet`` assigns one
+``HardwareProfile`` per satellite (e.g. a mixed FLyCube / S-band smallsat
+constellation), so generation and mode draws differ per satellite while
+the scheduler's link timings still come from the simulation's primary
+profile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.eclipse import eclipse_series
+from repro.sim.hardware import HardwareProfile
+
+_MWS_PER_WH = 3.6e6      # mW * s  per  Wh
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyConfig:
+    """Battery + participation-gating knobs (``FLConfig.energy``).
+
+    battery_capacity_wh
+        Usable battery capacity in watt-hours; a scalar applies to every
+        satellite, a length-K sequence sets per-satellite capacities.
+        Default 15 Wh is an 18650-pair CubeSat pack.
+    initial_soc
+        Starting state of charge as a fraction of capacity (scalar or
+        per-satellite sequence).
+    min_soc
+        Participation floor: a satellite whose SoC fraction is below this
+        at selection time is ineligible for the round (masked out of the
+        contact-plan projection with a zero-weight slot — the padded
+        training dispatch never changes shape, so no retracing).
+    eclipse_dt_s
+        Integration grid step for the eclipse series / SoC integrator.
+        Independent of the contact plan's ``dt_s``.
+    fleet
+        Optional per-satellite ``HardwareProfile`` tuple (length K) for
+        heterogeneous constellations; ``None`` means every satellite uses
+        the simulation's primary profile.
+    """
+    battery_capacity_wh: Union[float, Sequence[float]] = 15.0
+    initial_soc: Union[float, Sequence[float]] = 1.0
+    min_soc: float = 0.3
+    eclipse_dt_s: float = 60.0
+    fleet: Optional[Tuple[HardwareProfile, ...]] = None
+
+
+def mixed_fleet(profiles: Sequence[HardwareProfile], n_sats: int
+                ) -> Tuple[HardwareProfile, ...]:
+    """Cycle ``profiles`` across ``n_sats`` satellites (round-robin)."""
+    return tuple(profiles[i % len(profiles)] for i in range(n_sats))
+
+
+def _per_sat(value, n: int) -> np.ndarray:
+    arr = np.asarray(value, np.float64)
+    if arr.ndim == 0:
+        return np.full(n, float(arr))
+    if arr.shape != (n,):
+        raise ValueError(f"expected scalar or ({n},) array, got {arr.shape}")
+    return arr.copy()
+
+
+class EnergySim:
+    """Vectorized battery integrator over the whole constellation.
+
+    State: ``soc_wh`` (K,) watt-hours and the wall-clock ``t`` it is valid
+    at. ``advance_to(t)`` integrates solar generation (masked by the
+    precomputed eclipse series) minus the continuous idle draw, stepping
+    the uniform eclipse grid with per-step clamping to [0, capacity];
+    ``bill_activity`` subtracts the *added* energy of FL work the round
+    engine scheduled. Past the eclipse grid's end the last eclipse state
+    is held.
+    """
+
+    def __init__(self, times: np.ndarray, eclipse: np.ndarray,
+                 profiles: Sequence[HardwareProfile], cfg: EnergyConfig,
+                 extra_load_mw: float = 0.0):
+        times = np.asarray(times, np.float64)
+        eclipse = np.asarray(eclipse, bool)
+        K = eclipse.shape[1]
+        if len(profiles) != K:
+            raise ValueError(f"{len(profiles)} profiles for {K} satellites")
+        if len(times) != eclipse.shape[0]:
+            raise ValueError("times and eclipse series disagree on T")
+        self.times = times
+        self._t0 = float(times[0])
+        self.dt = float(times[1] - times[0]) if len(times) > 1 else 60.0
+        self._sunlit = (~eclipse).astype(np.float64)          # (T, K)
+        self.gen_mw = np.array([p.power_generation_mw for p in profiles])
+        self.idle_mw = np.array([p.power.idle for p in profiles])
+        self.train_mw = np.array([p.power.training for p in profiles])
+        self.tx_mw = np.array([p.power.radio_tx for p in profiles])
+        self.load_mw = self.idle_mw + float(extra_load_mw)    # continuous
+        self.cap_wh = _per_sat(cfg.battery_capacity_wh, K)
+        self.min_soc = float(cfg.min_soc)
+        self.soc_wh = _per_sat(cfg.initial_soc, K) * self.cap_wh
+        self.t = self._t0
+
+    # -- construction ----------------------------------------------------
+    @classmethod
+    def for_constellation(cls, c: WalkerStar, horizon_s: float,
+                          hw: HardwareProfile, cfg: EnergyConfig,
+                          extra_load_mw: float = 0.0) -> "EnergySim":
+        raan, phase, _ = satellite_elements(c)
+        times = np.arange(0.0, horizon_s, cfg.eclipse_dt_s)
+        ecl = eclipse_series(c, raan, phase, np.radians(c.inclination_deg),
+                             times)
+        profiles = cfg.fleet if cfg.fleet is not None else (hw,) * c.n_sats
+        return cls(times, ecl, profiles, cfg, extra_load_mw=extra_load_mw)
+
+    @classmethod
+    def for_plan(cls, plan, hw: HardwareProfile, cfg: EnergyConfig
+                 ) -> "EnergySim":
+        return cls.for_constellation(plan.constellation, plan.horizon_s,
+                                     hw, cfg)
+
+    # -- integration -----------------------------------------------------
+    def _grid_index(self, t: float) -> int:
+        i = int((t - self._t0) // self.dt)
+        return min(max(i, 0), len(self.times) - 1)
+
+    def advance_to(self, t: float) -> None:
+        """Integrate idle draw + solar input up to time ``t`` (monotone:
+        earlier times are a no-op, so repeated same-``t`` queries inside
+        one round are idempotent)."""
+        t = float(t)
+        if t <= self.t:
+            return
+        cur = self.t
+        while cur < t - 1e-9:
+            i = self._grid_index(cur)
+            boundary = self._t0 + (i + 1) * self.dt
+            if boundary <= cur:                 # past the grid: hold state
+                boundary = cur + self.dt
+            step = min(t, boundary) - cur
+            net_mw = self.gen_mw * self._sunlit[i] - self.load_mw
+            self.soc_wh += net_mw * step / _MWS_PER_WH
+            np.clip(self.soc_wh, 0.0, self.cap_wh, out=self.soc_wh)
+            cur += step
+        self.t = t
+
+    # -- queries ---------------------------------------------------------
+    def soc_frac(self) -> np.ndarray:
+        """(K,) state of charge as a fraction of capacity."""
+        return self.soc_wh / np.maximum(self.cap_wh, 1e-12)
+
+    def eligible(self) -> np.ndarray:
+        """(K,) bool: SoC at or above the participation floor."""
+        return self.soc_wh >= self.min_soc * self.cap_wh - 1e-12
+
+    def recover_time(self, k: int) -> Optional[float]:
+        """Earliest time >= ``t`` at which satellite k's SoC (idle + solar
+        only) reaches the participation floor, or None if it never does
+        within the eclipse grid."""
+        target = self.min_soc * float(self.cap_wh[k])
+        soc = float(self.soc_wh[k])
+        if soc >= target - 1e-12:
+            return self.t
+        cur = self.t
+        end = self._t0 + len(self.times) * self.dt
+        gen, load = float(self.gen_mw[k]), float(self.load_mw[k])
+        cap = float(self.cap_wh[k])
+        while cur < end:
+            i = self._grid_index(cur)
+            boundary = max(self._t0 + (i + 1) * self.dt, cur + 1e-9)
+            step = min(boundary, end) - cur
+            rate = (gen * float(self._sunlit[i, k]) - load) / _MWS_PER_WH
+            nxt = min(soc + rate * step, cap)
+            if rate > 0 and nxt >= target:
+                return cur + (target - soc) / rate
+            soc = max(nxt, 0.0)
+            cur += step
+        return None
+
+    # -- FL activity billing --------------------------------------------
+    def activity_wh(self, ks: np.ndarray, train_s: np.ndarray,
+                    comm_s: np.ndarray) -> np.ndarray:
+        """Added energy (above idle) of ``train_s`` seconds of on-board
+        training and ``comm_s`` seconds of keyed radio for sats ``ks``."""
+        ks = np.asarray(ks, np.int64)
+        return (np.asarray(train_s) * (self.train_mw[ks] - self.idle_mw[ks])
+                + np.asarray(comm_s) * (self.tx_mw[ks] - self.idle_mw[ks])
+                ) / _MWS_PER_WH
+
+    def bill_activity(self, ks, train_s, comm_s) -> float:
+        """Subtract the added FL energy from ``ks``'s batteries (clamped at
+        0) and return the total watt-hours billed."""
+        ks = np.asarray(ks, np.int64)
+        wh = self.activity_wh(ks, train_s, comm_s)
+        np.subtract.at(self.soc_wh, ks, wh)
+        np.clip(self.soc_wh, 0.0, self.cap_wh, out=self.soc_wh)
+        return float(wh.sum())

@@ -21,6 +21,25 @@ from repro.sim.hardware import FLYCUBE, HardwareProfile
 
 @dataclasses.dataclass
 class SimConfig:
+    """One FLySTacK experiment = constellation x dataset x algorithm.
+
+    ``algorithm``: key in ``repro.core.spaceify.ALGORITHMS`` (fedavg,
+    fedavg_sch, fedavg_intrasl, fedprox, fedprox_sch, fedprox_schv2,
+    fedprox_intrasl, fedbuff) or "autoflsat".
+    ``n_clusters`` / ``sats_per_cluster``: Walker-star geometry — orbital
+    planes and satellites per plane (every satellite is one FL client).
+    ``n_ground_stations``: first N of the 13 IGS stations (paper Fig. 10).
+    ``dataset``: "femnist" | "cifar10" | "eurosat" synthetic federated
+    splits; ``n_per_client`` samples each, Dirichlet(``alpha``) label skew
+    (smaller alpha = more non-IID). ``model``: see ``FLConfig.model``.
+    ``horizon_days`` / ``dt_s``: access-window simulation span and time
+    grid step. ``min_elev_deg``: ground-station elevation mask.
+    ``fl``: the ``FLConfig`` passed to the algorithm — including
+    ``fl.energy`` for battery SoC gating (see ``repro.sim.energy``).
+    ``epochs_mode``: AutoFLSat only — "fixed" uses ``fl.epochs``, "auto"
+    derives the budget from the ISL exchange schedule (Algorithm 2).
+    ``seed``: dataset partition seed (``fl.seed`` drives training).
+    """
     algorithm: str = "fedavg"            # key in ALGORITHMS or "autoflsat"
     n_clusters: int = 2
     sats_per_cluster: int = 5
@@ -67,6 +86,16 @@ class SimResult:
                 return (r.t_end - self.records[0].t_start) / 3600
         return None
 
+    def total_energy_wh(self) -> float:
+        """Fleet-total added FL energy over the run (0 when energy off)."""
+        return float(sum(r.energy_wh for r in self.records))
+
+    def total_skipped_low_power(self) -> int:
+        """Orbit-eligible satellites masked by the battery floor, summed
+        over rounds. A fleet power-health gauge — every masked candidate
+        counts, including ones the cohort would not have selected."""
+        return int(sum(r.skipped_low_power for r in self.records))
+
     def summary(self) -> dict:
         return {
             "algorithm": self.config.algorithm,
@@ -79,6 +108,8 @@ class SimResult:
             "mean_round_h": round(self.mean_round_duration_h(), 4),
             "mean_idle_h": round(self.mean_idle_h(), 4),
             "total_h": round(self.total_training_time_h(), 3),
+            "energy_wh": round(self.total_energy_wh(), 3),
+            "skipped_low_power": self.total_skipped_low_power(),
         }
 
 

@@ -13,7 +13,14 @@ from typing import Dict
 
 @dataclasses.dataclass(frozen=True)
 class PowerModes:
-    """Consumption in mW (paper Table 2, FLyCube = PyCubed + RPi Zero 2W)."""
+    """Whole-satellite draw per operating mode, in mW (paper Table 2;
+    FLyCube = PyCubed flight computer + RPi Zero 2W ML unit).
+
+    ``idle`` is the bus keep-alive draw; ``radio_tx`` keys the radio with
+    the ML unit idle; ``training`` runs local SGD with the radio silent;
+    ``training_tx`` does both at once. The battery integrator
+    (``repro.sim.energy``) bills idle continuously and the *difference*
+    ``mode - idle`` for FL activity, so nothing is double-counted."""
     idle: float = 760.0
     radio_tx: float = 1613.0
     training: float = 2178.0
@@ -22,21 +29,38 @@ class PowerModes:
 
 @dataclasses.dataclass(frozen=True)
 class HardwareProfile:
+    """One satellite class: compute speed, link rates, and power.
+
+    ``epoch_time_s``: wall-clock seconds for one local epoch on the ML
+    unit — the scheduler's unit of on-board compute.
+    ``downlink_rate_bps`` / ``uplink_rate_bps`` / ``isl_rate_bps``: link
+    data rates (sat->ground, ground->sat, sat<->sat); transmission time is
+    ``bytes * 8 / rate`` via :meth:`tx_time`, and the bytes are the
+    *quantized* wire size when ``FLConfig.quant_bits > 0``.
+    ``power``: the :class:`PowerModes` draw table.
+    ``power_generation_mw``: solar input while sunlit. The seed model
+    treated this as an orbital average; with ``FLConfig.energy`` set, the
+    battery integrator applies it only outside eclipse, so it should be
+    the panel's *sunlit* output.
+    """
     name: str
     epoch_time_s: float            # one local epoch on the ML unit
     downlink_rate_bps: float       # sat -> ground
     uplink_rate_bps: float         # ground -> sat
     isl_rate_bps: float            # sat <-> sat
     power: PowerModes = PowerModes()
-    power_generation_mw: float = 4000.0   # solar panel orbital average
+    power_generation_mw: float = 4000.0   # solar panel output while sunlit
 
     def tx_time(self, n_bytes: float, link: str = "downlink") -> float:
+        """Seconds to move ``n_bytes`` over ``link`` ("downlink" |
+        "uplink" | "isl")."""
         rate = {"downlink": self.downlink_rate_bps,
                 "uplink": self.uplink_rate_bps,
                 "isl": self.isl_rate_bps}[link]
         return n_bytes * 8.0 / rate
 
     def train_time(self, epochs: float) -> float:
+        """Seconds of on-board compute for ``epochs`` local epochs."""
         return epochs * self.epoch_time_s
 
 

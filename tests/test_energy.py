@@ -1,0 +1,251 @@
+"""Energy subsystem: eclipse geometry, battery SoC integration, the
+previously-untested Table 2 power arithmetic, and battery gating of the
+round engines (including the no-retrace and energy=None-is-identical
+guarantees)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.autoflsat import AutoFLSat
+from repro.core.client import clear_train_caches, train_cache_sizes
+from repro.core.contact_plan import ContactPlan, build_contact_plan
+from repro.core.spaceify import FedAvgSat, FedBuffSat, FLConfig
+from repro.data.synthetic import make_federated_dataset
+from repro.orbit.constellation import R_EARTH, WalkerStar, satellite_elements
+from repro.orbit.eclipse import (eclipse_fraction, eclipse_series,
+                                 sun_direction_eci)
+from repro.sim.energy import EnergyConfig, EnergySim, mixed_fleet
+from repro.sim.hardware import (FLYCUBE, SMALLSAT_SBAND, HardwareProfile,
+                                PowerModes, oap_added_mw, power_feasible)
+
+
+# ---------------------------------------------------------------------------
+# eclipse geometry (cylindrical umbra)
+# ---------------------------------------------------------------------------
+
+
+def test_sun_direction_unit_norm_and_equinox():
+    ts = np.array([0.0, 86_400.0 * 91.3125, 86_400.0 * 365.25])
+    s = np.asarray(sun_direction_eci(ts))
+    assert np.allclose(np.linalg.norm(s, axis=-1), 1.0, atol=1e-6)
+    assert np.allclose(s[0], [1.0, 0.0, 0.0], atol=1e-6)   # vernal equinox
+    assert np.allclose(s[2], [1.0, 0.0, 0.0], atol=1e-2)   # one year later
+    # quarter year: tilted by the obliquity out of the equator
+    assert abs(s[1][2] - np.sin(np.radians(23.44))) < 1e-2
+
+
+def test_eclipse_fraction_matches_cylinder_analytics():
+    """Sun in the orbit plane => eclipsed arc is 2*asin(R_E/a); sun normal
+    to the plane => no eclipse at 500 km. WalkerStar(2, 3) gives one plane
+    of each at t~0 (raan 0 contains +x ~ the sun; raan 90deg is normal)."""
+    c = WalkerStar(2, 3)
+    raan, phase, _ = satellite_elements(c)
+    times = np.arange(0.0, c.period_s, 10.0)
+    frac = eclipse_fraction(c, raan, phase, np.radians(90.0), times)
+    expect = np.arcsin(R_EARTH / c.radius_m) / np.pi     # ~0.378
+    assert np.allclose(frac[:3], expect, atol=0.02)      # sun-in-plane
+    assert np.all(frac[3:] < 0.02)                        # sun-normal plane
+
+
+def test_eclipse_series_chunking_consistent():
+    c = WalkerStar(1, 4)
+    raan, phase, _ = satellite_elements(c)
+    times = np.arange(0.0, 6000.0, 30.0)
+    a = eclipse_series(c, raan, phase, np.radians(90.0), times, chunk=7)
+    b = eclipse_series(c, raan, phase, np.radians(90.0), times, chunk=4096)
+    assert (a == b).all()
+
+
+# ---------------------------------------------------------------------------
+# Table 2 power arithmetic (previously untested)
+# ---------------------------------------------------------------------------
+
+
+def test_oap_added_matches_table2_worked_example():
+    """Paper Table 2: 80% training + 20% training_tx ~= 2370 mW added."""
+    duty = {"training": 0.8, "training_tx": 0.2}
+    assert oap_added_mw(duty) == pytest.approx(2370.0, abs=1.0)
+    # per-mode contributions
+    assert oap_added_mw({"training": 0.8}) == pytest.approx(0.8 * 2178.0)
+    assert oap_added_mw({}) == 0.0
+
+
+def test_power_feasible_thresholds():
+    duty = {"training": 0.8, "training_tx": 0.2}   # 760 + 2370 = 3130 mW
+    assert power_feasible(duty, FLYCUBE)           # 4 W generation
+    starved = dataclasses.replace(FLYCUBE, power_generation_mw=3000.0)
+    assert not power_feasible(duty, starved)
+
+
+# ---------------------------------------------------------------------------
+# battery SoC integrator
+# ---------------------------------------------------------------------------
+
+
+def _sim(eclipsed: bool, horizon_s=7200.0, profile=FLYCUBE, **cfg_kw):
+    times = np.arange(0.0, horizon_s, 60.0)
+    ecl = np.full((len(times), 1), eclipsed)
+    cfg = EnergyConfig(**{"battery_capacity_wh": 10.0, **cfg_kw})
+    return EnergySim(times, ecl, (profile,), cfg)
+
+
+def test_soc_charges_in_sun_and_clamps_at_capacity():
+    sim = _sim(False, initial_soc=0.1)
+    sim.advance_to(3600.0)
+    # net (4000 - 760) mW for an hour = 3.24 Wh on top of 1.0 Wh
+    assert sim.soc_wh[0] == pytest.approx(1.0 + 3.24, abs=1e-6)
+    sim.advance_to(7200.0 + 10 * 3600.0)   # holds last state past the grid
+    assert sim.soc_wh[0] == pytest.approx(10.0)
+
+
+def test_soc_drains_in_eclipse_and_clamps_at_zero():
+    sim = _sim(True, initial_soc=0.1)
+    sim.advance_to(3600.0)
+    assert sim.soc_wh[0] == pytest.approx(1.0 - 0.76, abs=1e-6)
+    sim.advance_to(7200.0)
+    assert sim.eligible()[0] == (sim.soc_wh[0] >= 0.3 * 10.0)
+    sim.advance_to(48 * 3600.0)
+    assert sim.soc_wh[0] == 0.0            # clamped, never negative
+
+
+def test_advance_is_monotone_idempotent():
+    sim = _sim(False, initial_soc=0.5)
+    sim.advance_to(1800.0)
+    soc = sim.soc_wh.copy()
+    sim.advance_to(1800.0)                 # same t: no-op
+    sim.advance_to(900.0)                  # earlier t: no-op
+    assert (sim.soc_wh == soc).all()
+
+
+def test_bill_activity_charges_added_power_only():
+    sim = _sim(True, initial_soc=1.0)
+    p = FLYCUBE.power
+    wh = sim.bill_activity(np.array([0]), np.array([600.0]),
+                           np.array([120.0]))
+    expect = (600.0 * (p.training - p.idle)
+              + 120.0 * (p.radio_tx - p.idle)) / 3.6e6
+    assert wh == pytest.approx(expect)
+    assert sim.soc_wh[0] == pytest.approx(10.0 - expect)
+
+
+def test_recover_time_full_sun():
+    sim = _sim(False, horizon_s=8000.0, initial_soc=0.0, min_soc=0.5)
+    t = sim.recover_time(0)
+    # 5 Wh deficit at (4000 - 760) mW
+    assert t == pytest.approx(5.0 * 3.6e6 / 3240.0, abs=1.0)
+    # fully eclipsed: the battery never comes back
+    dark = _sim(True, initial_soc=0.0, min_soc=0.5)
+    assert dark.recover_time(0) is None
+
+
+def test_heterogeneous_fleet_per_sat_profiles():
+    lo = dataclasses.replace(FLYCUBE, power_generation_mw=2500.0)
+    hi = dataclasses.replace(SMALLSAT_SBAND, power_generation_mw=9000.0,
+                             power=PowerModes(idle=1500.0))
+    fleet = mixed_fleet((lo, hi), 4)
+    times = np.arange(0.0, 3600.0, 60.0)
+    sim = EnergySim(times, np.zeros((len(times), 4), bool), fleet,
+                    EnergyConfig(battery_capacity_wh=(1.0, 2.0, 3.0, 4.0)))
+    assert list(sim.gen_mw) == [2500.0, 9000.0, 2500.0, 9000.0]
+    assert list(sim.idle_mw) == [760.0, 1500.0, 760.0, 1500.0]
+    assert list(sim.cap_wh) == [1.0, 2.0, 3.0, 4.0]
+    with pytest.raises(ValueError):
+        EnergySim(times, np.zeros((len(times), 4), bool), fleet[:3],
+                  EnergyConfig())
+
+
+# ---------------------------------------------------------------------------
+# battery gating of the round engines
+# ---------------------------------------------------------------------------
+
+_FAST_HW = HardwareProfile(name="fast", epoch_time_s=50.0,
+                           downlink_rate_bps=8e9, uplink_rate_bps=8e9,
+                           isl_rate_bps=8e9)
+
+
+def _dense_plan(K=2, horizon=40_000.0, every=4000.0, dur=300.0):
+    """K satellites of one plane, all with the same periodic GS windows."""
+    c = WalkerStar(1, K)
+    wins = [[(float(s), float(s + dur), 0)
+             for s in np.arange(0.0, horizon - dur, every)]
+            for _ in range(K)]
+    return ContactPlan(constellation=c, horizon_s=horizon, sat_windows=wins,
+                       cluster_of=np.zeros(K, np.int32), pair_windows={})
+
+
+def _cfg(**kw):
+    base = dict(model="mlp", clients_per_round=2, epochs=1, batch_size=8,
+                max_rounds=2, max_local_epochs=4)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_low_power_satellite_skipped_without_retracing():
+    """A drained satellite must be masked out of the round, the round must
+    bill positive energy, and the padded dispatch must still trace once."""
+    plan = _dense_plan()
+    ds = make_federated_dataset("femnist", 2, 16)
+    e = EnergyConfig(battery_capacity_wh=10.0, initial_soc=(1.0, 0.02),
+                     min_soc=0.5)
+    clear_train_caches()
+    algo = FedAvgSat(plan, _FAST_HW, ds, _cfg(energy=e))
+    recs = algo.run()
+    assert len(recs) >= 1
+    assert recs[0].participants == [0]          # sat 1 below the floor
+    assert recs[0].skipped_low_power == 1
+    assert recs[0].energy_wh > 0.0
+    assert train_cache_sizes()["local_sgd_clients"] == 1
+
+
+def test_non_binding_energy_config_matches_energy_off_bitwise():
+    """With a floor of 0 the energy mask is all-True, so the engine must
+    make identical decisions AND produce bitwise-identical params — the
+    gate is a pure mask, never a perturbation."""
+    plan = _dense_plan()
+    ds = make_federated_dataset("femnist", 2, 16)
+    off = FedAvgSat(plan, _FAST_HW, ds, _cfg())
+    recs_off = off.run()
+    on = FedAvgSat(plan, _FAST_HW, ds,
+                   _cfg(energy=EnergyConfig(min_soc=0.0)))
+    recs_on = on.run()
+    assert [r.participants for r in recs_off] == \
+        [r.participants for r in recs_on]
+    assert [(r.t_start, r.t_end) for r in recs_off] == \
+        [(r.t_start, r.t_end) for r in recs_on]
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(off.global_params),
+                    jax.tree_util.tree_leaves(on.global_params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # energy off keeps the record fields at their zero defaults
+    assert all(r.energy_wh == 0.0 and r.skipped_low_power == 0
+               for r in recs_off)
+    assert all(r.energy_wh > 0.0 for r in recs_on)
+
+
+def test_autoflsat_masks_drained_satellite():
+    plan = _dense_plan()
+    ds = make_federated_dataset("femnist", 2, 16)
+    e = EnergyConfig(battery_capacity_wh=10.0, initial_soc=(1.0, 0.02),
+                     min_soc=0.5)
+    algo = AutoFLSat(plan, _FAST_HW, ds, _cfg(max_rounds=1, energy=e))
+    recs = algo.run()
+    assert len(recs) == 1
+    assert recs[0].participants == [0]
+    assert recs[0].skipped_low_power == 1
+    assert recs[0].energy_wh > 0.0
+
+
+def test_fedbuff_drops_unrecoverable_client():
+    """gen < idle => a drained FedBuff client can never recharge to the
+    floor: it is dropped at seeding and all events come from sat 0."""
+    plan = _dense_plan()
+    ds = make_federated_dataset("femnist", 2, 16)
+    dying = dataclasses.replace(_FAST_HW, power_generation_mw=500.0)
+    e = EnergyConfig(battery_capacity_wh=50.0, initial_soc=(1.0, 0.02),
+                     min_soc=0.5, fleet=(dying, dying))
+    algo = FedBuffSat(plan, _FAST_HW, ds,
+                      _cfg(max_rounds=2, buffer_size=2, energy=e))
+    recs = algo.run()
+    assert len(recs) >= 1
+    assert all(r.energy_wh > 0.0 for r in recs)

@@ -1,0 +1,45 @@
+#!/usr/bin/env python
+"""Docs rot check (CI): every relative markdown link and every quoted
+`python <path>.py` command in README.md and docs/*.md must point at a
+file that exists in the repo."""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")
+SCRIPT_RE = re.compile(r"python\s+([\w./-]+\.py)")
+PATH_RE = re.compile(r"`((?:src|tests|benchmarks|examples|docs|tools)/"
+                     r"[\w./-]+)`")
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    problems = []
+    for f in files:
+        text = f.read_text()
+        rel = f.relative_to(ROOT)
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if not (f.parent / target).exists() \
+                    and not (ROOT / target).exists():
+                problems.append(f"{rel}: broken link -> {target}")
+        for regex, what in ((SCRIPT_RE, "quoted script"),
+                            (PATH_RE, "quoted path")):
+            for m in regex.finditer(text):
+                path = m.group(1).rstrip("/")
+                if not (ROOT / path).exists():
+                    problems.append(f"{rel}: {what} missing -> {path}")
+    if problems:
+        print("\n".join(problems))
+        return 1
+    print(f"docs OK: {len(files)} files checked")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -335,7 +335,7 @@ class SpaceifiedFL:
     def _post_recovery_contact(self, k: int, t: float):
         """Stand-down policy for a drained satellite: its earliest GS
         contact at/after battery recovery (idle + solar only), or None if
-        the battery never clears the floor within the horizon."""
+        the battery never clears the floor."""
         rt = self.energy.recover_time(k)
         return None if rt is None else self.plan.next_contact(k, max(rt, t))
 
@@ -478,30 +478,33 @@ class FedBuffSat(SpaceifiedFL):
         pickup_round: Dict[int, int] = {}
         epochs_of: Dict[int, int] = {}
         idle_of: Dict[int, float] = {}      # gap between train-end and return
-        elig = None
+        # seed the fleet with one batched contact-plan pass: drained
+        # satellites query from their (batched) battery-recovery time
+        # instead of t0 — satellites that never recover get an inf query,
+        # which next_contacts reports as invalid.
+        tq = np.full(K, t0)
         if self.energy is not None:
             self.energy.advance_to(t0)
-            elig = self.energy.eligible()
+            drained = np.nonzero(~self.energy.eligible())[0]
+            if len(drained):
+                rts = self.energy.recover_times(drained)
+                tq[drained] = np.where(np.isfinite(rts),
+                                       np.maximum(rts, t0), np.inf)
+        avail, _, _, valid = plan.next_contacts(tq)
+        recv_end_k = avail + self._t_up()
+        ret_avail, _, _, ret_valid = plan.next_contacts(
+            np.where(valid, recv_end_k + hw.epoch_time_s, np.inf))
         for k in range(K):
-            if elig is not None and not elig[k]:
-                # below the SoC floor at kickoff: stand down until idle +
-                # solar recovers the battery, then join at the next contact
-                w = self._post_recovery_contact(k, t0)
-            else:
-                w = plan.next_contact(k, t0)
-            if w is None:
+            if not (valid[k] and ret_valid[k]):
                 continue
-            recv_end = w[0] + self._t_up()
-            ret = plan.next_contact(k, recv_end + hw.epoch_time_s)
-            if ret is None:
-                continue
-            ep = int(np.clip((ret[0] - recv_end) // hw.epoch_time_s, 1,
+            recv_end, ret0 = float(recv_end_k[k]), float(ret_avail[k])
+            ep = int(np.clip((ret0 - recv_end) // hw.epoch_time_s, 1,
                              cfg.max_local_epochs))
-            heapq.heappush(heap, (ret[0] + self._t_down(), k))
+            heapq.heappush(heap, (ret0 + self._t_down(), k))
             client_params[k] = self._tx_global()
             pickup_round[k] = 0
             epochs_of[k] = ep
-            idle_of[k] = max(ret[0] - (recv_end + ep * hw.epoch_time_s), 0.0)
+            idle_of[k] = max(ret0 - (recv_end + ep * hw.epoch_time_s), 0.0)
 
         buf, r = [], 0
         t_round_start = t0

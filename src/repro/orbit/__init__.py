@@ -1,5 +1,6 @@
 from repro.orbit.constellation import WalkerStar, satellite_elements
 from repro.orbit.eclipse import (
+    PackedEclipse,
     eclipse_fraction,
     eclipse_series,
     sun_direction_eci,
@@ -10,6 +11,7 @@ from repro.orbit.visibility import (
     access_windows,
     elevation_mask_series,
     interplane_los_series,
+    transitions_from_bool_matrix,
     windows_from_bool,
 )
 
@@ -17,5 +19,7 @@ __all__ = [
     "WalkerStar", "satellite_elements", "IGS_STATIONS", "gs_ecef",
     "eci_positions", "ecef_positions", "access_windows",
     "elevation_mask_series", "interplane_los_series", "windows_from_bool",
-    "eclipse_series", "eclipse_fraction", "sun_direction_eci",
+    "transitions_from_bool_matrix",
+    "PackedEclipse", "eclipse_series", "eclipse_fraction",
+    "sun_direction_eci",
 ]

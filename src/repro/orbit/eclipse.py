@@ -18,12 +18,15 @@ Everything is vectorized in JAX and chunked over time exactly like
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.orbit.constellation import R_EARTH, WalkerStar
 from repro.orbit.propagate import eci_positions
+from repro.orbit.visibility import transitions_from_bool_matrix
 
 OBLIQUITY_RAD = np.radians(23.44)
 YEAR_S = 365.25 * 86_400.0
@@ -45,9 +48,56 @@ def sun_direction_eci(times):
                      axis=-1)
 
 
+@dataclasses.dataclass(frozen=True)
+class PackedEclipse:
+    """Packed (event) representation of an eclipse series.
+
+    Instead of the dense (T, K) boolean tensor — O(T*K) resident, ~110 MB
+    in float64-sunlit form for a 40x40 constellation at dt=10s over 24 h —
+    only the *state transitions* are kept: per-satellite transition times
+    in one flat CSR-offset array (the ``contact_plan.py`` layout), plus the
+    initial state. A LEO satellite crosses the terminator ~2x per orbit, so
+    this is O(K*W) with W ~ 2 * horizon / period.
+
+    The cell-hold convention matches the dense series: a transition at
+    time ``tau`` means the state changes at ``tau`` and holds until the
+    next transition; after the last transition the final state is held.
+    """
+    t0: float                    # grid start (state before any transition)
+    init_eclipsed: np.ndarray    # (K,) bool — eclipsed at t0
+    trans_t: np.ndarray          # (N,) float64 transition times, CSR by sat
+    offsets: np.ndarray          # (K+1,) int64 CSR offsets into trans_t
+
+    @property
+    def n_sats(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the packed representation."""
+        return (self.trans_t.nbytes + self.offsets.nbytes
+                + self.init_eclipsed.nbytes)
+
+    def to_dense(self, times: np.ndarray) -> np.ndarray:
+        """Reconstruct the dense (T, K) boolean series (tests/debugging)."""
+        times = np.asarray(times, np.float64)
+        out = np.empty((len(times), self.n_sats), bool)
+        for k in range(self.n_sats):
+            row = self.trans_t[self.offsets[k]:self.offsets[k + 1]]
+            flips = np.searchsorted(row, times, side="right")
+            out[:, k] = self.init_eclipsed[k] ^ (flips % 2).astype(bool)
+        return out
+
+
 def eclipse_series(c: WalkerStar, raan, phase, incl, times,
-                   chunk: int = 8192) -> np.ndarray:
-    """Boolean eclipse series (T, K): sat k inside Earth's umbra at time t."""
+                   chunk: int = 8192, packed: bool = False):
+    """Boolean eclipse series (T, K): sat k inside Earth's umbra at time t.
+
+    With ``packed=True`` the dense tensor is never materialized beyond one
+    chunk: each (chunk, K) block is diffed against the previous block's
+    last row and only the transitions are kept, returning a
+    ``PackedEclipse`` (O(K*W) memory instead of O(T*K)).
+    """
     k = max(int(c.n_sats), 1)
     chunk = max(1, min(chunk, _CHUNK_ELEM_BUDGET // k))
 
@@ -59,11 +109,35 @@ def eclipse_series(c: WalkerStar, raan, phase, incl, times,
         perp = pos - proj[..., None] * s[:, None, :]
         return (proj < 0.0) & (jnp.linalg.norm(perp, axis=-1) < R_EARTH)
 
-    outs = []
     times = np.asarray(times)
+    if not packed:
+        outs = []
+        for i in range(0, len(times), chunk):
+            outs.append(np.asarray(block(jnp.asarray(times[i:i + chunk]))))
+        return np.concatenate(outs, axis=0)
+
+    init = None
+    carry = None
+    sats, ts_ = [], []
     for i in range(0, len(times), chunk):
-        outs.append(np.asarray(block(jnp.asarray(times[i:i + chunk]))))
-    return np.concatenate(outs, axis=0)
+        blk = np.asarray(block(jnp.asarray(times[i:i + chunk])))
+        if init is None:
+            init = blk[0].copy()
+        ki, ti = transitions_from_bool_matrix(blk, times[i:i + chunk],
+                                              prev=carry)
+        sats.append(ki)
+        ts_.append(ti)
+        carry = blk[-1]
+    sat = np.concatenate(sats) if sats else np.zeros(0, np.int64)
+    tt = np.concatenate(ts_) if ts_ else np.zeros(0, np.float64)
+    order = np.lexsort((tt, sat))       # chunk blocks interleave: re-sort
+    sat, tt = sat[order], tt[order]
+    offsets = np.zeros(k + 1, np.int64)
+    np.cumsum(np.bincount(sat, minlength=k), out=offsets[1:])
+    if init is None:
+        init = np.zeros(k, bool)
+    return PackedEclipse(t0=float(times[0]) if len(times) else 0.0,
+                         init_eclipsed=init, trans_t=tt, offsets=offsets)
 
 
 def eclipse_fraction(c: WalkerStar, raan, phase, incl, times,

@@ -1,0 +1,133 @@
+"""Frozen reference battery integrator (the PR 3 ``EnergySim``).
+
+This is the per-timestep engine the event-driven interval engine in
+``repro.sim.energy`` replaced: it keeps the full (T, K) sunlit matrix in
+float64 — O(T*K) resident memory — and advances SoC with a Python while
+loop over eclipse-grid cells. Retained unoptimized per the repo's
+``_ref.py`` golden-parity convention (see docs/ARCHITECTURE.md):
+``tests/test_energy_engine.py`` asserts the live engine matches it and
+``benchmarks/energy_perf.py`` meters the speedup against it. Do not
+optimize this module.
+
+One deliberate deviation from the PR 3 code: ``recover_time`` now holds
+the last eclipse state past the grid end, matching ``advance_to`` (which
+always did). The PR 3 version returned ``None`` at
+``end = t0 + len(times) * dt`` even when continued integration would have
+recharged the battery — a semantics mismatch, not a behavior to preserve;
+both engines share the aligned hold-last-state convention.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.sim.energy import EnergyConfig, _per_sat
+from repro.sim.hardware import HardwareProfile
+
+_MWS_PER_WH = 3.6e6      # mW * s  per  Wh
+
+
+class EnergySimRef:
+    """Per-step battery integrator over the dense (T, K) sunlit matrix."""
+
+    def __init__(self, times: np.ndarray, eclipse: np.ndarray,
+                 profiles: Sequence[HardwareProfile], cfg: EnergyConfig,
+                 extra_load_mw: float = 0.0):
+        times = np.asarray(times, np.float64)
+        eclipse = np.asarray(eclipse, bool)
+        K = eclipse.shape[1]
+        if len(profiles) != K:
+            raise ValueError(f"{len(profiles)} profiles for {K} satellites")
+        if len(times) != eclipse.shape[0]:
+            raise ValueError("times and eclipse series disagree on T")
+        self.times = times
+        self._t0 = float(times[0])
+        self.dt = float(times[1] - times[0]) if len(times) > 1 else 60.0
+        self._sunlit = (~eclipse).astype(np.float64)          # (T, K)
+        self.gen_mw = np.array([p.power_generation_mw for p in profiles])
+        self.idle_mw = np.array([p.power.idle for p in profiles])
+        self.train_mw = np.array([p.power.training for p in profiles])
+        self.tx_mw = np.array([p.power.radio_tx for p in profiles])
+        self.load_mw = self.idle_mw + float(extra_load_mw)    # continuous
+        self.cap_wh = _per_sat(cfg.battery_capacity_wh, K)
+        self.min_soc = float(cfg.min_soc)
+        self.soc_wh = _per_sat(cfg.initial_soc, K) * self.cap_wh
+        self.t = self._t0
+
+    # -- integration -----------------------------------------------------
+    def _grid_index(self, t: float) -> int:
+        i = int((t - self._t0) // self.dt)
+        return min(max(i, 0), len(self.times) - 1)
+
+    def advance_to(self, t: float) -> None:
+        """Integrate idle draw + solar input up to time ``t`` (monotone:
+        earlier times are a no-op). Past the grid end the last eclipse
+        state is held."""
+        t = float(t)
+        if t <= self.t:
+            return
+        cur = self.t
+        while cur < t - 1e-9:
+            i = self._grid_index(cur)
+            boundary = self._t0 + (i + 1) * self.dt
+            if boundary <= cur:                 # past the grid: hold state
+                boundary = cur + self.dt
+            step = min(t, boundary) - cur
+            net_mw = self.gen_mw * self._sunlit[i] - self.load_mw
+            self.soc_wh += net_mw * step / _MWS_PER_WH
+            np.clip(self.soc_wh, 0.0, self.cap_wh, out=self.soc_wh)
+            cur += step
+        self.t = t
+
+    # -- queries ---------------------------------------------------------
+    def soc_frac(self) -> np.ndarray:
+        return self.soc_wh / np.maximum(self.cap_wh, 1e-12)
+
+    def eligible(self) -> np.ndarray:
+        return self.soc_wh >= self.min_soc * self.cap_wh - 1e-12
+
+    def recover_time(self, k: int) -> Optional[float]:
+        """Earliest time >= ``t`` at which satellite k's SoC (idle + solar
+        only) reaches the participation floor, or None if it never does.
+        Past the grid end the last eclipse state is held (same convention
+        as ``advance_to``)."""
+        target = self.min_soc * float(self.cap_wh[k])
+        soc = float(self.soc_wh[k])
+        if soc >= target - 1e-12:
+            return self.t
+        cur = self.t
+        end = self._t0 + len(self.times) * self.dt
+        gen, load = float(self.gen_mw[k]), float(self.load_mw[k])
+        cap = float(self.cap_wh[k])
+        while cur < end:
+            i = self._grid_index(cur)
+            boundary = max(self._t0 + (i + 1) * self.dt, cur + 1e-9)
+            step = min(boundary, end) - cur
+            rate = (gen * float(self._sunlit[i, k]) - load) / _MWS_PER_WH
+            nxt = min(soc + rate * step, cap)
+            if rate > 0 and nxt >= target:
+                return cur + (target - soc) / rate
+            soc = max(nxt, 0.0)
+            cur += step
+        # past the grid: the last eclipse state is held forever, so a
+        # positive net rate still recovers the battery.
+        rate = (gen * float(self._sunlit[-1, k]) - load) / _MWS_PER_WH
+        if rate > 0:
+            return cur + (target - soc) / rate
+        return None
+
+    # -- FL activity billing --------------------------------------------
+    def activity_wh(self, ks: np.ndarray, train_s: np.ndarray,
+                    comm_s: np.ndarray) -> np.ndarray:
+        ks = np.asarray(ks, np.int64)
+        return (np.asarray(train_s) * (self.train_mw[ks] - self.idle_mw[ks])
+                + np.asarray(comm_s) * (self.tx_mw[ks] - self.idle_mw[ks])
+                ) / _MWS_PER_WH
+
+    def bill_activity(self, ks, train_s, comm_s) -> float:
+        ks = np.asarray(ks, np.int64)
+        wh = self.activity_wh(ks, train_s, comm_s)
+        np.subtract.at(self.soc_wh, ks, wh)
+        np.clip(self.soc_wh, 0.0, self.cap_wh, out=self.soc_wh)
+        return float(wh.sum())

@@ -1,0 +1,223 @@
+"""Interval energy engine golden parity against the retained per-step
+reference integrator (``repro.sim.energy_ref``), the packed eclipse path,
+the hold-last-state grid semantics, and the billing/window vectorization
+ride-alongs."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.orbit.constellation import WalkerStar, satellite_elements
+from repro.orbit.eclipse import PackedEclipse, eclipse_series
+from repro.orbit.visibility import (access_window_arrays, access_windows,
+                                    transitions_from_bool_matrix)
+from repro.sim.energy import EnergyConfig, EnergySim
+from repro.sim.energy_ref import EnergySimRef
+from repro.sim.hardware import FLYCUBE, PowerModes
+
+
+def _random_fleet(rng, K):
+    return tuple(dataclasses.replace(
+        FLYCUBE,
+        power_generation_mw=float(rng.uniform(300, 9000)),
+        power=PowerModes(idle=float(rng.uniform(300, 2000))))
+        for _ in range(K))
+
+
+def _random_eclipse(rng, T, K):
+    """Alternating sunlit/eclipse runs of random length per satellite."""
+    ecl = np.zeros((T, K), bool)
+    for k in range(K):
+        i, state = 0, bool(rng.integers(2))
+        while i < T:
+            run = int(rng.integers(1, 40))
+            ecl[i:i + run, k] = state
+            state = not state
+            i += run
+    return ecl
+
+
+def _pair(rng, T=240, K=6, dt=30.0, **cfg_kw):
+    times = np.arange(T) * dt
+    ecl = _random_eclipse(rng, T, K)
+    profs = _random_fleet(rng, K)
+    cfg = EnergyConfig(**{"battery_capacity_wh": rng.uniform(0.05, 3.0, K),
+                          "initial_soc": rng.uniform(0, 1, K),
+                          "min_soc": float(rng.uniform(0.1, 0.9)),
+                          **cfg_kw})
+    return (EnergySim(times, ecl, profs, cfg),
+            EnergySimRef(times, ecl, profs, cfg), T * dt)
+
+
+# ---------------------------------------------------------------------------
+# golden parity: advance / bill / recover
+# ---------------------------------------------------------------------------
+
+
+def test_advance_and_bill_match_reference():
+    rng = np.random.default_rng(7)
+    for _ in range(8):
+        sim, ref, horizon = _pair(rng)
+        t = 0.0
+        for _ in range(12):
+            t += float(rng.uniform(0.0, horizon * 0.25))
+            sim.advance_to(t)
+            ref.advance_to(t)
+            assert np.allclose(sim.soc_wh, ref.soc_wh, atol=1e-8)
+            if rng.random() < 0.5:
+                K = len(sim.soc_wh)
+                ks = rng.integers(0, K, size=3)
+                tr = rng.uniform(0, 4000, 3)
+                cm = rng.uniform(0, 400, 3)
+                assert sim.bill_activity(ks, tr, cm) == \
+                    pytest.approx(ref.bill_activity(ks, tr, cm))
+                assert np.allclose(sim.soc_wh, ref.soc_wh, atol=1e-8)
+
+
+def test_recover_times_match_reference_batched():
+    rng = np.random.default_rng(11)
+    for _ in range(8):
+        sim, ref, horizon = _pair(rng)
+        t = float(rng.uniform(0.0, horizon * 1.2))   # may start past grid
+        sim.advance_to(t)
+        ref.advance_to(t)
+        K = len(sim.soc_wh)
+        got = sim.recover_times(np.arange(K))
+        for k in range(K):
+            want = ref.recover_time(k)
+            if want is None:
+                assert not np.isfinite(got[k])
+            else:
+                assert got[k] == pytest.approx(want, abs=1e-5)
+        # scalar wrapper agrees with the batch
+        for k in range(K):
+            rt = sim.recover_time(k)
+            assert (rt is None) == (not np.isfinite(got[k]))
+            if rt is not None:
+                assert rt == pytest.approx(float(got[k]))
+
+
+def test_recover_times_empty_query():
+    rng = np.random.default_rng(3)
+    sim, _, _ = _pair(rng)
+    assert sim.recover_times(np.zeros(0, np.int64)).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# hold-last-state past the eclipse grid (the PR 3 semantics mismatch)
+# ---------------------------------------------------------------------------
+
+
+def test_recover_time_holds_last_state_past_grid():
+    """A satellite whose grid ends sunlit keeps charging past the grid end
+    (the convention advance_to always used), so a drained client near the
+    horizon recovers instead of being treated as dead — in both engines."""
+    times = np.arange(0.0, 3600.0, 60.0)
+    ecl = np.ones((len(times), 1), bool)
+    ecl[-1] = False                       # sunlit at the very end
+    cfg = EnergyConfig(battery_capacity_wh=10.0, initial_soc=0.0,
+                       min_soc=0.5)
+    sim = EnergySim(times, ecl, (FLYCUBE,), cfg)
+    ref = EnergySimRef(times, ecl, (FLYCUBE,), cfg)
+    rt, rr = sim.recover_time(0), ref.recover_time(0)
+    assert rt is not None and rr is not None
+    assert rt == pytest.approx(rr, abs=1e-6)
+    assert rt > times[-1]                 # recovery lies past the grid
+    # and advance_to agrees with the recovery time it promised
+    sim.advance_to(rt)
+    assert sim.soc_wh[0] == pytest.approx(0.5 * 10.0, abs=1e-6)
+    # a grid that ends eclipsed still never recovers (net-negative hold)
+    dark = EnergySim(times, np.ones((len(times), 1), bool), (FLYCUBE,), cfg)
+    assert dark.recover_time(0) is None
+
+
+# ---------------------------------------------------------------------------
+# billing: bincount accumulation keeps duplicate-index semantics
+# ---------------------------------------------------------------------------
+
+
+def test_bill_activity_accumulates_duplicate_indices():
+    times = np.arange(0.0, 3600.0, 60.0)
+    sim = EnergySim(times, np.ones((len(times), 2), bool), (FLYCUBE,) * 2,
+                    EnergyConfig(battery_capacity_wh=10.0))
+    p = FLYCUBE.power
+    ks = np.array([0, 0, 1])              # sat 0 billed twice in one round
+    tr = np.array([600.0, 300.0, 100.0])
+    cm = np.array([60.0, 30.0, 10.0])
+    wh = sim.bill_activity(ks, tr, cm)
+    per = (tr * (p.training - p.idle) + cm * (p.radio_tx - p.idle)) / 3.6e6
+    assert wh == pytest.approx(per.sum())
+    assert sim.soc_wh[0] == pytest.approx(10.0 - per[0] - per[1])
+    assert sim.soc_wh[1] == pytest.approx(10.0 - per[2])
+
+
+# ---------------------------------------------------------------------------
+# packed eclipse path
+# ---------------------------------------------------------------------------
+
+
+def test_packed_eclipse_matches_dense_and_chunking():
+    c = WalkerStar(2, 3)
+    raan, phase, _ = satellite_elements(c)
+    times = np.arange(0.0, 2 * c.period_s, 30.0)
+    incl = np.radians(90.0)
+    dense = eclipse_series(c, raan, phase, incl, times)
+    for chunk in (97, 8192):              # cross-chunk transitions included
+        packed = eclipse_series(c, raan, phase, incl, times, chunk=chunk,
+                                packed=True)
+        assert isinstance(packed, PackedEclipse)
+        assert (packed.to_dense(times) == dense).all()
+    assert packed.nbytes < dense.shape[0] * dense.shape[1] * 8
+
+
+def test_energysim_from_packed_matches_dense():
+    c = WalkerStar(2, 3)
+    raan, phase, _ = satellite_elements(c)
+    times = np.arange(0.0, 2 * c.period_s, 30.0)
+    incl = np.radians(90.0)
+    dense = eclipse_series(c, raan, phase, incl, times)
+    packed = eclipse_series(c, raan, phase, incl, times, packed=True)
+    cfg = EnergyConfig(battery_capacity_wh=2.0, initial_soc=0.4)
+    a = EnergySim(times, dense, (FLYCUBE,) * c.n_sats, cfg)
+    b = EnergySim(times, packed, (FLYCUBE,) * c.n_sats, cfg)
+    for t in (500.0, 3000.0, 9000.0, times[-1] + 5000.0):
+        a.advance_to(t)
+        b.advance_to(t)
+        assert (a.soc_wh == b.soc_wh).all()
+    assert (a.recover_times(np.arange(c.n_sats))
+            == b.recover_times(np.arange(c.n_sats))).all()
+
+
+def test_transitions_from_bool_matrix_chunk_carry():
+    rng = np.random.default_rng(5)
+    vis = rng.random((50, 4)) < 0.5
+    times = np.arange(50) * 10.0
+    ks, ts = transitions_from_bool_matrix(vis, times)
+    k1, t1 = transitions_from_bool_matrix(vis[:20], times[:20])
+    k2, t2 = transitions_from_bool_matrix(vis[20:], times[20:],
+                                          prev=vis[19])
+    ka = np.concatenate([k1, k2])
+    ta = np.concatenate([t1, t2])
+    order = np.lexsort((ta, ka))
+    assert (ka[order] == ks).all() and (ta[order] == ts).all()
+
+
+# ---------------------------------------------------------------------------
+# access_windows vectorized split (ride-along)
+# ---------------------------------------------------------------------------
+
+
+def test_access_windows_matches_flat_arrays():
+    from repro.orbit.groundstations import gs_ecef
+    c = WalkerStar(2, 3)
+    raan, phase, _ = satellite_elements(c)
+    times = np.arange(0.0, c.period_s, 30.0)
+    gs = gs_ecef(3)
+    incl = np.radians(c.inclination_deg)
+    wins = access_windows(c, raan, phase, incl, times, gs)
+    sat, gsi, s, e = access_window_arrays(c, raan, phase, incl, times, gs)
+    expect = [[] for _ in range(c.n_sats)]
+    for k, g, ts, te in zip(sat, gsi, s, e):    # the old zip-loop
+        expect[int(k)].append((float(ts), float(te), int(g)))
+    assert wins == expect
+    assert all(isinstance(w, tuple) for row in wins for w in row)

@@ -28,13 +28,16 @@ K = CLUSTERS * SPC
 print("== access windows + eclipse geometry ==")
 plan = build_contact_plan(CLUSTERS, SPC, GS, horizon_s=86_400, dt_s=60.0)
 
-# a mixed FLyCube / S-band fleet with small batteries; half the fleet
-# starts nearly drained (e.g. fresh out of a payload-heavy eclipse season)
+# a mixed FLyCube / S-band fleet (SimConfig.fleet: each satellite is
+# TIMED with its own radio + ML unit, and the battery model bills the
+# same per-satellite hardware — the shared-fleet invariant) with small
+# batteries; half the fleet starts nearly drained (e.g. fresh out of a
+# payload-heavy eclipse season)
+FLEET = mixed_fleet((FLYCUBE, SMALLSAT_SBAND), K)
 energy = EnergyConfig(
     battery_capacity_wh=10.0,
     initial_soc=tuple(1.0 if k % 2 == 0 else 0.05 for k in range(K)),
     min_soc=0.4,
-    fleet=mixed_fleet((FLYCUBE, SMALLSAT_SBAND), K),
 )
 
 results = {}
@@ -44,8 +47,8 @@ for label, ecfg in (("unlimited power", None), ("battery-gated", energy)):
     cfg = SimConfig(algorithm="fedavg", n_clusters=CLUSTERS,
                     sats_per_cluster=SPC, n_ground_stations=GS,
                     horizon_days=1.0, dataset="femnist", n_per_client=32,
-                    fl=fl)
-    res = FLySTacK(cfg, hw=SMALLSAT_SBAND, plan=plan).run()
+                    fl=fl, fleet=FLEET)
+    res = FLySTacK(cfg, plan=plan).run()
     results[label] = res
     print(f"\n-- {label} --")
     for r in res.records:

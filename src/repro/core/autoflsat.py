@@ -35,6 +35,16 @@ class InterSLSchedule:
     passes: List[Tuple[int, int, float]]   # (ci, cj, t_exchange)
 
 
+def _fleet_mean(a) -> float:
+    """Mean of a per-satellite array, exact for a uniform fleet: summing
+    K equal doubles and dividing by K is not an IEEE identity, and the
+    uniform fleet must reproduce the scalar primary-profile record fields
+    bitwise (the round-engine parity suite compares them with ==)."""
+    a = np.asarray(a, np.float64)
+    first = a.flat[0]
+    return float(first) if np.all(a == first) else float(np.mean(a))
+
+
 class AutoFLSat(SpaceifiedFL):
     name = "autoflsat"
 
@@ -51,20 +61,37 @@ class AutoFLSat(SpaceifiedFL):
 
     # ------------------------------------------------------------------
     def inter_sl_scheduler(self, t: float) -> Optional[InterSLSchedule]:
-        """Algorithm 2's InterSLScheduler: chain the C(C-1)/2 pair passes."""
+        """Algorithm 2's InterSLScheduler: chain the C(C-1)/2 pair passes.
+
+        Heterogeneous fleets: each pairwise exchange is bottlenecked by
+        the slowest ISL radio among the two clusters' members (the
+        cluster model must cross that pair's weakest link), so pair
+        passes get per-pair durations. A uniform fleet reduces to the
+        single scalar duration of the primary-profile engine."""
         C = self.n_clusters
-        tx = self.hw.tx_time(self.tx_bytes, "isl") * 2.0   # bidirectional
         if C == 1:
-            e = self.cfg.epochs
-            t_done = t + self.hw.train_time(e)
-            return InterSLSchedule(t, t_done, e, [])
+            # no pair passes to chain: the round end is entirely the
+            # tier-1 train+exchange completion, which run_round computes
+            # over the *participating* satellites (a schedule-side max
+            # over all members would let a battery-masked slow satellite
+            # gate a round it sits out; for an all-eligible fleet
+            # run_round's t_train_done >= this anyway, so dropping the
+            # train time here is behavior-neutral).
+            return InterSLSchedule(t, t, self.cfg.epochs, [])
+        spc = self.plan.constellation.sats_per_cluster
+        rate_c = self.fleet.isl_rate_bps.reshape(C, spc).min(1)
+        tx = {(ci, cj):
+              self.tx_bytes * 8.0 / min(rate_c[ci], rate_c[cj]) * 2.0
+              for ci in range(C) for cj in range(ci + 1, C)}  # bidirectional
         chained = self.plan.chain_pair_transfers(t, tx)
         if chained is None:
             return None
         t_cur, passes = chained
         if self.epochs_mode == "auto":
-            # epochs from first & last comms record (Algorithm 2)
-            e = max(1, int((t_cur - t) // self.hw.epoch_time_s))
+            # epochs from first & last comms record (Algorithm 2); the
+            # budget must fit the slowest ML unit so tier 1 stays in sync
+            e = max(1, int((t_cur - t)
+                           // float(np.max(self.fleet.epoch_time_s))))
             e = min(e, self.cfg.max_local_epochs)
         else:
             e = self.cfg.epochs
@@ -133,10 +160,20 @@ class AutoFLSat(SpaceifiedFL):
             # the round still advances time (the exchange slots were spent)
 
         # timing: training overlaps the exchange chain; the round ends when
-        # both the last pairwise pass and local training are done.
-        train_time = self.hw.train_time(e)
-        intra_comm = self.hw.tx_time(self.tx_bytes, "isl") * 2.0
-        t_train_done = t + train_time + intra_comm
+        # both the last pairwise pass and local training are done. Each
+        # member trains and exchanges on its own hardware — the slowest
+        # *participating* satellite gates the synchronous tier-1 phase
+        # (a battery-masked member trains nothing, so it cannot stretch
+        # the round it sits out; the tier-2 pair schedule stays the
+        # conservative whole-cluster bottleneck, since the orbital
+        # exchange slots are fixed before SoC is known).
+        train_time_k = self.fleet.train_time(e)            # (K,)
+        intra_comm_k = self._t_isl_k * 2.0                 # (K,) bidirectional
+        done_k = t + train_time_k + intra_comm_k
+        if energy_ok is not None and energy_ok.any():
+            t_train_done = float(np.max(done_k[energy_ok]))
+        else:
+            t_train_done = float(np.max(done_k))
         t_round_end = max(sched.t_complete, t_train_done)
         idle = max(t_round_end - t_train_done, 0.0)
         K = plan.constellation.n_sats
@@ -146,17 +183,26 @@ class AutoFLSat(SpaceifiedFL):
             participants = [k for k in range(K) if energy_ok[k]]
             skipped = K - len(participants)
             self.energy.advance_to(t_round_end)
-            n = len(participants)
+            ksel = np.asarray(participants, np.int64)
             wh = self.energy.bill_activity(
-                np.asarray(participants, np.int64),
-                np.full(n, train_time), np.full(n, intra_comm)) if n else 0.0
+                ksel, train_time_k[ksel], intra_comm_k[ksel]) \
+                if len(ksel) else 0.0
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
+        # per-member comm: own intra-cluster exchanges + this member's
+        # share of the tier-2 pass chain. Record means cover the
+        # *participants* (like comm_s_by_sat and the energy bill); with
+        # energy off everyone participates and the exact-mean shortcut
+        # keeps the uniform fleet bitwise-identical to the scalar engine.
+        comm_k = intra_comm_k * 2 \
+            + len(sched.passes) * self._t_isl_k * 2.0 / max(C, 1)
+        psel = np.asarray(participants, np.int64)
+        comm_rec = _fleet_mean(comm_k[psel]) if len(psel) else 0.0
+        train_rec = _fleet_mean(train_time_k[psel]) if len(psel) else 0.0
         # cluster-model divergence (paper §5.2): per-cluster accuracies
         return RoundRecord(r, t, t_round_end, t_round_end - t, idle,
-                           intra_comm * 2
-                           + len(sched.passes)
-                           * self.hw.tx_time(self.tx_bytes, "isl") * 2.0 / max(C, 1),
-                           train_time, acc, participants,
+                           comm_rec, train_rec, acc, participants,
                            epochs=float(e), energy_wh=wh,
-                           skipped_low_power=skipped)
+                           skipped_low_power=skipped,
+                           comm_s_by_sat={k: float(comm_k[k])
+                                          for k in participants})

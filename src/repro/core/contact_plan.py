@@ -210,16 +210,23 @@ class ContactPlan:
             return None
         return float(s[j]) + (target - float(cum[j]))
 
-    def chain_pair_transfers(self, t: float, tx_seconds: float):
+    def chain_pair_transfers(self, t: float, tx_seconds):
         """Chain the C(C-1)/2 pairwise transfers of Algorithm 2's
-        InterSLScheduler. Returns (t_complete, [(ci, cj, t_start)]) or None
-        if any pair never accumulates enough airtime."""
+        InterSLScheduler. ``tx_seconds`` is the per-pass transfer
+        duration: one scalar for a uniform fleet, or a ``{(ci, cj):
+        seconds}`` mapping when per-satellite ISL rates make pair
+        exchanges heterogeneous. Returns (t_complete,
+        [(ci, cj, t_start)]) or None if any pair never accumulates enough
+        airtime."""
         C = self.constellation.n_clusters
+        per_pair = tx_seconds if isinstance(tx_seconds, dict) else None
         t_cur = t
         passes: List[Tuple[int, int, float]] = []
         for ci in range(C):
             for cj in range(ci + 1, C):
-                done = self.transmit_over_pair(ci, cj, t_cur, tx_seconds)
+                dur = per_pair[(ci, cj)] if per_pair is not None \
+                    else tx_seconds
+                done = self.transmit_over_pair(ci, cj, t_cur, dur)
                 if done is None:
                     return None
                 passes.append((ci, cj, t_cur))

@@ -23,6 +23,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim.optimizers import AdamWConfig
 from repro.train.steps import TrainState, init_train_state, make_train_step
@@ -108,11 +109,15 @@ def sync_interval_from_orbits(plan, hw, model_bytes: float,
                               max_h: int = 500) -> int:
     """Derive H (steps between cluster syncs) from the InterSLScheduler:
     chain the C(C-1)/2 pairwise ISL passes and convert the exchange-period
-    wall time into training steps (Algorithm 2's epoch budget, recast)."""
+    wall time into training steps (Algorithm 2's epoch budget, recast).
+
+    ``hw`` may be one ``HardwareProfile`` or a ``FleetProfile``; with a
+    mixed fleet the exchange is bottlenecked by the slowest ISL radio
+    (``tx_time`` returns per-satellite times, the max gates the pass)."""
     C = plan.constellation.n_clusters
     if C <= 1:
         return 1
-    tx = hw.tx_time(model_bytes, "isl") * 2.0
+    tx = 2.0 * float(np.max(hw.tx_time(model_bytes, "isl")))
     chained = plan.chain_pair_transfers(t, tx)
     if chained is None:
         return max_h

@@ -9,13 +9,16 @@ fixed-shape engine replaces. ``benchmarks/round_engine_perf.py`` and
 participant sets, round timings and (for ``quant_bits=0``) bitwise global
 params, then measure the speedup. Do not "optimize" this module.
 
-One deliberate deviation from the seed: this baseline shares the
+Two deliberate deviations from the seed: (1) this baseline shares the
 order-pinned ``weighted_average`` (sequential fori_loop accumulation) with
 the new engine. The seed's ``.sum(0)`` let XLA pick a cohort-size-dependent
 reduction tree, so NO unpadded baseline could be bitwise-comparable across
 widths; the shared fold is within float-epsilon of the seed's result
 (``test_weighted_average_matches_manual``) and makes the padded-vs-unpadded
-bitwise gate meaningful."""
+bitwise gate meaningful. (2) FedAvgSatRef shares the live engine's idle
+clamp (``max(ret_avail - train_end, 0)``) — the seed's unclamped
+difference went negative whenever the return window was already open at
+train end, which was a bug, not a behaviour worth preserving."""
 from __future__ import annotations
 
 import heapq
@@ -97,8 +100,12 @@ class FedAvgSatRef(_RefEval, FedAvgSat):
 
         ks = np.asarray(sel)
         ends = proj["ret_avail"][ks] + self._t_down()
+        # second deliberate deviation from the seed: the seed's unclamped
+        # idle went negative when the return window was already open at
+        # train end; the live engine clamps (like FedProxSat always did),
+        # so the baseline shares the clamp to stay timing-comparable.
         idles = (proj["contact_avail"][ks] - t) \
-            + (proj["ret_avail"][ks] - proj["train_end"][ks])
+            + np.maximum(proj["ret_avail"][ks] - proj["train_end"][ks], 0.0)
         comms = np.full(len(sel), self._t_up() + self._t_down())
         trains = proj["train_end"][ks] - proj["recv_end"][ks]
         t_round_end = float(ends.max())

@@ -46,6 +46,20 @@ aggregated with ``quantized_weighted_average``, which routes the
 dequantize+accumulate through the ``quant_agg`` Pallas kernel (compiled on
 TPU, jnp fallback elsewhere; ``cfg.quant_kernel`` overrides).
 
+Heterogeneous fleets (per-satellite hardware)
+---------------------------------------------
+The ``hw`` argument may be one ``HardwareProfile`` (uniform fleet), a
+``FleetProfile``, or a length-K profile sequence. Timing is always read
+from the vectorized fleet arrays — ``(K,)`` uplink/downlink/ISL times and
+epoch durations — so a mixed FLyCube / S-band constellation times every
+satellite with its own radio and ML unit. A uniform fleet evaluates the
+exact same IEEE operations as the scalar primary-profile engine, so it
+stays bitwise-identical (``tests/test_fleet.py``,
+``benchmarks/fleet_mix_perf.py`` gate this). With ``FLConfig.energy``
+set, the battery simulation defaults to the same fleet, so power and
+timing always bill the same hardware (the shared-fleet invariant;
+``EnergyConfig.fleet`` can still override power-only what-ifs).
+
 Energy gating (``FLConfig.energy``)
 -----------------------------------
 With an ``EnergyConfig`` set, every algorithm consults a battery
@@ -81,7 +95,7 @@ from repro.core.contact_plan import ContactPlan
 from repro.core.quantize import quantize_roundtrip, transmit_bytes
 from repro.models.small import MODELS, accuracy
 from repro.sim.energy import EnergyConfig, EnergySim
-from repro.sim.hardware import HardwareProfile
+from repro.sim.hardware import FleetProfile, HardwareProfile
 
 
 @dataclasses.dataclass
@@ -104,6 +118,9 @@ class RoundRecord:
     # health gauge: it counts every masked candidate, whether or not the
     # cohort would have selected it
     skipped_low_power: int = 0
+    # per-participant communication seconds {sat: s} — on a heterogeneous
+    # fleet, slow-radio satellites show proportionally larger entries
+    comm_s_by_sat: Dict[int, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -188,22 +205,35 @@ class SpaceifiedFL:
 
     name = "base"
 
-    def __init__(self, plan: ContactPlan, hw: HardwareProfile, dataset,
-                 cfg: FLConfig):
-        self.plan, self.hw, self.ds, self.cfg = plan, hw, dataset, cfg
+    def __init__(self, plan: ContactPlan, hw, dataset, cfg: FLConfig):
+        # hw: HardwareProfile (uniform fleet), FleetProfile, or a
+        # length-K profile sequence — timing always reads the fleet
+        # arrays; self.hw stays the scalar primary profile for compat.
+        self.fleet = FleetProfile.build(hw, plan.constellation.n_sats)
+        self.hw = hw if isinstance(hw, HardwareProfile) else \
+            self.fleet.primary
+        self.plan, self.ds, self.cfg = plan, dataset, cfg
         key = jax.random.PRNGKey(cfg.seed)
         self.key, init_key = jax.random.split(key)
         init_fn, self.apply_fn = MODELS[cfg.model]
         img_shape = tuple(dataset.x.shape[2:])
         self.global_params = init_fn(init_key, img_shape, dataset.n_classes)
         self.tx_bytes = _model_tx_bytes(self.global_params, cfg)
+        # (K,) per-satellite link times for the (fixed) wire size
+        self._t_up_k = self.fleet.tx_time(self.tx_bytes, "uplink")
+        self._t_down_k = self.fleet.tx_time(self.tx_bytes, "downlink")
+        self._t_isl_k = self.fleet.tx_time(self.tx_bytes, "isl")
         self.records: List[RoundRecord] = []
         self._tx_cache = self._tx_cache_src = None
         # battery SoC gating (FLConfig.energy); None => engine is bitwise
         # identical to the pre-energy path (nothing below ever consults it)
         self.energy: Optional[EnergySim] = None
         if cfg.energy is not None:
-            self.energy = EnergySim.for_plan(plan, hw, cfg.energy)
+            # shared-fleet invariant: unless EnergyConfig.fleet overrides,
+            # the battery bills the same per-satellite hardware that the
+            # timing above schedules with
+            self.energy = EnergySim.for_plan(plan, self.hw, cfg.energy,
+                                             fleet=self.fleet.profiles)
 
     # -- timing helpers -------------------------------------------------
     def _t_up(self):
@@ -218,8 +248,8 @@ class SpaceifiedFL:
         w = self.plan.next_contact(k, t)
         if w is None:
             return None
-        recv_end = w[0] + self._t_up()
-        train_end = recv_end + self.hw.train_time(epochs)
+        recv_end = w[0] + self._t_up_k[k]
+        train_end = recv_end + epochs * self.fleet.epoch_time_s[k]
         if self.cfg.selection == "intra_sl":
             ret = self.plan.next_cluster_contact(k, train_end)
             if ret is None:
@@ -236,8 +266,8 @@ class SpaceifiedFL:
         sequential Python projections. Returns a dict of (K,) arrays."""
         plan = self.plan
         avail, end, gs, valid = plan.next_contacts(t)
-        recv_end = avail + self._t_up()
-        train_end = recv_end + self.hw.train_time(epochs)
+        recv_end = avail + self._t_up_k
+        train_end = recv_end + self.fleet.train_time(epochs)
         if self.cfg.selection == "intra_sl":
             r_avail, r_end, r_gs, relay, r_valid = \
                 plan.next_cluster_contacts(train_end)
@@ -264,7 +294,7 @@ class SpaceifiedFL:
         if cfg.selection == "first_contact":
             score = proj["contact_avail"]          # first to make contact
         else:                                      # scheduled / intra_sl
-            score = proj["ret_avail"] + self._t_down()  # contact+return
+            score = proj["ret_avail"] + self._t_down_k  # contact+return
         ks = np.nonzero(proj["valid"])[0]
         order = np.lexsort((ks, score[ks]))        # score, then sat index
         m = min(cfg.clients_per_round, len(ks))
@@ -392,10 +422,12 @@ class FedAvgSat(SpaceifiedFL):
         self.global_params = self._aggregate(trained, n_k)
 
         ks = np.asarray(sel)
-        ends = proj["ret_avail"][ks] + self._t_down()
+        ends = proj["ret_avail"][ks] + self._t_down_k[ks]
+        # clamp like FedProxSat: a return window already open at train end
+        # means zero idle, not negative idle
         idles = (proj["contact_avail"][ks] - t) \
-            + (proj["ret_avail"][ks] - proj["train_end"][ks])
-        comms = np.full(len(sel), self._t_up() + self._t_down())
+            + np.maximum(proj["ret_avail"][ks] - proj["train_end"][ks], 0.0)
+        comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = proj["train_end"][ks] - proj["recv_end"][ks]
         t_round_end = float(ends.max())
         wh, skipped = self._round_energy(proj, ks, trains, comms, t_round_end)
@@ -405,7 +437,8 @@ class FedAvgSat(SpaceifiedFL):
                            float(np.mean(idles)), float(np.mean(comms)),
                            float(np.mean(trains)), acc, sel,
                            epochs=cfg.epochs, energy_wh=wh,
-                           skipped_low_power=skipped)
+                           skipped_low_power=skipped,
+                           comm_s_by_sat=dict(zip(sel, comms.tolist())))
 
 
 class FedProxSat(SpaceifiedFL):
@@ -433,16 +466,16 @@ class FedProxSat(SpaceifiedFL):
         ks = np.asarray(sel)
         recv_end = projf["recv_end"][ks]
         ep = np.clip(((projf["ret_avail"][ks] - recv_end)
-                      // self.hw.epoch_time_s).astype(np.int64),
+                      // self.fleet.epoch_time_s[ks]).astype(np.int64),
                      floor_ep, cfg.max_local_epochs).astype(np.int32)
-        train_end = recv_end + self.hw.train_time(1) * ep
+        train_end = recv_end + self.fleet.epoch_time_s[ks] * ep
         trained, n_k = self._train_cohort(sel, ep, prox=True)
         self.global_params = self._aggregate(trained, n_k)
 
-        ends = projf["ret_avail"][ks] + self._t_down()
+        ends = projf["ret_avail"][ks] + self._t_down_k[ks]
         idles = (projf["contact_avail"][ks] - t) \
             + np.maximum(projf["ret_avail"][ks] - train_end, 0.0)
-        comms = np.full(len(sel), self._t_up() + self._t_down())
+        comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = train_end - recv_end
         t_round_end = float(ends.max())
         wh, skipped = self._round_energy(projf, ks, trains, comms,
@@ -453,7 +486,8 @@ class FedProxSat(SpaceifiedFL):
                            float(np.mean(idles)), float(np.mean(comms)),
                            float(np.mean(trains)), acc, sel,
                            epochs=float(np.mean(ep)), energy_wh=wh,
-                           skipped_low_power=skipped)
+                           skipped_low_power=skipped,
+                           comm_s_by_sat=dict(zip(sel, comms.tolist())))
 
 
 class FedBuffSat(SpaceifiedFL):
@@ -467,17 +501,25 @@ class FedBuffSat(SpaceifiedFL):
 
     def run(self, t0: float = 0.0, t_end: Optional[float] = None,
             max_rounds: Optional[int] = None):
-        cfg, plan, hw = self.cfg, self.plan, self.hw
+        cfg, plan = self.cfg, self.plan
         t_end = t_end if t_end is not None else plan.horizon_s
         max_rounds = max_rounds or cfg.max_rounds
         K = plan.constellation.n_sats
 
+        ep_s = self.fleet.epoch_time_s            # (K,) per-satellite
         # client states: params version picked up, pickup round, pickup time
         heap = []
         client_params: Dict[int, object] = {}
         pickup_round: Dict[int, int] = {}
         epochs_of: Dict[int, int] = {}
         idle_of: Dict[int, float] = {}      # gap between train-end and return
+        # uplink seconds of a pickup whose contact the event clock has not
+        # passed yet — the initial seed pickups and any pickup deferred
+        # past a recharge stand-down. Billed at the client's next
+        # processed return, by which time the clock has passed the
+        # pickup's contact, so every episode's bill is uplink + training
+        # + downlink, each at (or after) the contact where it happened.
+        deferred_up: Dict[int, float] = {}
         # seed the fleet with one batched contact-plan pass: drained
         # satellites query from their (batched) battery-recovery time
         # instead of t0 — satellites that never recover get an inf query,
@@ -491,25 +533,28 @@ class FedBuffSat(SpaceifiedFL):
                 tq[drained] = np.where(np.isfinite(rts),
                                        np.maximum(rts, t0), np.inf)
         avail, _, _, valid = plan.next_contacts(tq)
-        recv_end_k = avail + self._t_up()
+        recv_end_k = avail + self._t_up_k
         ret_avail, _, _, ret_valid = plan.next_contacts(
-            np.where(valid, recv_end_k + hw.epoch_time_s, np.inf))
+            np.where(valid, recv_end_k + ep_s, np.inf))
         for k in range(K):
             if not (valid[k] and ret_valid[k]):
                 continue
             recv_end, ret0 = float(recv_end_k[k]), float(ret_avail[k])
-            ep = int(np.clip((ret0 - recv_end) // hw.epoch_time_s, 1,
+            ep = int(np.clip((ret0 - recv_end) // ep_s[k], 1,
                              cfg.max_local_epochs))
-            heapq.heappush(heap, (ret0 + self._t_down(), k))
+            heapq.heappush(heap, (ret0 + float(self._t_down_k[k]), k))
             client_params[k] = self._tx_global()
             pickup_round[k] = 0
             epochs_of[k] = ep
-            idle_of[k] = max(ret0 - (recv_end + ep * hw.epoch_time_s), 0.0)
+            idle_of[k] = max(ret0 - (recv_end + ep * float(ep_s[k])), 0.0)
+            if self.energy is not None:     # the seed pickup's uplink
+                deferred_up[k] = float(self._t_up_k[k])
 
         buf, r = [], 0
         t_round_start = t0
         idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
         energy_acc, skip_acc = 0.0, 0
+        comm_by: Dict[int, float] = {}
         while heap and r < max_rounds:
             t_ret, k = heapq.heappop(heap)
             if t_ret > t_end:
@@ -524,38 +569,61 @@ class FedBuffSat(SpaceifiedFL):
             stale = r - pickup_round[k]
             wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
             buf.append((trained, client_params[k], wgt))
-            comm_acc += self._t_up() + self._t_down()
-            train_acc += epochs_of[k] * hw.epoch_time_s
+            t_up, t_down = float(self._t_up_k[k]), float(self._t_down_k[k])
+            train_s = epochs_of[k] * float(ep_s[k])
+            comm_acc += t_up + t_down
+            comm_by[k] = comm_by.get(k, 0.0) + t_up + t_down
+            train_acc += train_s
             idle_acc += idle_of.get(k, 0.0)
             n_ev += 1
             # client immediately picks up the current global and continues
-            recv_end = t_ret + self._t_up()
-            requeue = True
+            recv_end = t_ret + t_up
+            requeue, stood_down = True, False
             if self.energy is not None:
                 self.energy.advance_to(t_ret)
+                # the completed episode is billed at its return contact:
+                # training, the downlink that just happened, and any pickup
+                # uplink deferred past a stand-down (whose contact the
+                # clock has now passed)
                 energy_acc += self.energy.bill_activity(
-                    np.array([k]),
-                    np.array([epochs_of[k] * hw.epoch_time_s]),
-                    np.array([self._t_up() + self._t_down()]))
+                    np.array([k]), np.array([train_s]),
+                    np.array([t_down + deferred_up.pop(k, 0.0)]))
                 if not self.energy.eligible()[k]:
                     # drained below the floor: stand down until idle+solar
-                    # recovers, then rejoin at the next contact after that
+                    # recovers, then rejoin at the next contact after that.
+                    # The deferred pickup's uplink is billed where it
+                    # actually happens (post-recovery), not here — at this
+                    # point the battery could not pay it and the charge
+                    # would vanish into the SoC floor clamp.
                     skip_acc += 1
+                    stood_down = True
                     w2 = self._post_recovery_contact(k, recv_end)
                     if w2 is None:
                         requeue = False     # never recovers: drops out
                     else:
-                        recv_end = w2[0] + self._t_up()
-            nxt = plan.next_contact(k, recv_end + hw.epoch_time_s) \
+                        recv_end = w2[0] + t_up
+            nxt = plan.next_contact(k, recv_end + float(ep_s[k])) \
                 if requeue else None
             if nxt is not None:
-                ep = int(np.clip((nxt[0] - recv_end) // hw.epoch_time_s, 1,
+                # the next pickup really starts an episode: bill its uplink
+                # — now, if it happens at this same contact; via
+                # deferred_up at the post-recovery contact otherwise. A
+                # client with no remaining return contact performs no
+                # pickup, so (symmetrically in both paths) none is billed.
+                if self.energy is not None:
+                    if stood_down:
+                        deferred_up[k] = t_up
+                    else:
+                        energy_acc += self.energy.bill_activity(
+                            np.array([k]), np.array([0.0]),
+                            np.array([t_up]))
+                ep = int(np.clip((nxt[0] - recv_end) // ep_s[k], 1,
                                  cfg.max_local_epochs))
-                heapq.heappush(heap, (nxt[0] + self._t_down(), k))
+                heapq.heappush(heap, (nxt[0] + t_down, k))
                 client_params[k] = self._tx_global()
                 pickup_round[k] = r
                 epochs_of[k] = ep
-                idle_of[k] = max(nxt[0] - (recv_end + ep * hw.epoch_time_s),
+                idle_of[k] = max(nxt[0] - (recv_end + ep * float(ep_s[k])),
                                  0.0)
 
             if len(buf) >= cfg.buffer_size:
@@ -575,10 +643,12 @@ class FedBuffSat(SpaceifiedFL):
                     idle_acc / max(n_ev, 1),
                     comm_acc / max(n_ev, 1), train_acc / max(n_ev, 1),
                     acc, [], epochs=float(np.mean(list(epochs_of.values()))),
-                    energy_wh=energy_acc, skipped_low_power=skip_acc))
+                    energy_wh=energy_acc, skipped_low_power=skip_acc,
+                    comm_s_by_sat=comm_by))
                 t_round_start = t_ret
                 idle_acc = comm_acc = train_acc = 0.0
                 energy_acc, skip_acc = 0.0, 0
+                comm_by = {}
                 n_ev = 0
                 r += 1
         return self.records

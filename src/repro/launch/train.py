@@ -62,6 +62,12 @@ def main():
                     help="steps between cluster syncs, or 'orbit' to derive "
                          "from a simulated constellation's ISL schedule")
     ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--fleet", default="smallsat_sband",
+                    help="with --hfl --sync-every orbit: comma-separated "
+                         "hardware profiles (flycube | smallsat_sband) "
+                         "cycled over the simulated constellation; a mixed "
+                         "fleet bottlenecks the ISL schedule on its "
+                         "slowest radio")
     ap.add_argument("--power-check", action="store_true",
                     help="with --hfl --sync-every orbit: report whether the "
                          "derived schedule's duty cycle fits the eclipse-"
@@ -82,33 +88,56 @@ def main():
         if args.sync_every == "orbit":
             from repro.core.contact_plan import build_contact_plan
             from repro.core.quantize import transmit_bytes
-            from repro.sim.hardware import SMALLSAT_SBAND
-            plan = build_contact_plan(nc, 10, 3, horizon_s=86400.0,
+            from repro.sim.hardware import (FLYCUBE, SMALLSAT_SBAND,
+                                            FleetProfile)
+            named = {"flycube": FLYCUBE, "smallsat_sband": SMALLSAT_SBAND}
+            try:
+                cycle = [named[n.strip()]
+                         for n in args.fleet.split(",") if n.strip()]
+            except KeyError as e:
+                raise SystemExit(f"unknown --fleet profile {e}; choose "
+                                 f"from {sorted(named)}")
+            if not cycle:
+                raise SystemExit(f"--fleet needs at least one profile "
+                                 f"from {sorted(named)}")
+            spc = 10
+            plan = build_contact_plan(nc, spc, 3, horizon_s=86400.0,
                                       dt_s=60.0, with_isl_pairs=True)
+            fleet = FleetProfile.from_profiles(
+                [cycle[i % len(cycle)] for i in range(nc * spc)])
             # bill the ISL exchange at the same (possibly quantized) wire
-            # size as every other link so the schedule stays consistent
+            # size as every other link so the schedule stays consistent;
+            # a mixed fleet's exchange is gated by its slowest ISL radio
             h_sync = H.sync_interval_from_orbits(
-                plan, SMALLSAT_SBAND,
+                plan, fleet,
                 transmit_bytes(state.params, args.quant_bits) / nc,
                 step_time_s=1.0)
-            print(f"[hfl] ISL schedule => sync every H={h_sync} steps")
+            print(f"[hfl] ISL schedule ({args.fleet}) => sync every "
+                  f"H={h_sync} steps")
             if args.power_check:
                 from repro.orbit.eclipse import mean_eclipse_fraction
-                from repro.sim.hardware import oap_added_mw
+                from repro.sim.hardware import oap_added_mw, power_feasible
                 ecl = mean_eclipse_fraction(plan.constellation)
-                hw = SMALLSAT_SBAND
-                tx_s = hw.tx_time(
-                    transmit_bytes(state.params, args.quant_bits) / nc, "isl")
-                duty_tx = min(tx_s / max(h_sync * 1.0, 1e-9), 1.0)
-                oap = oap_added_mw({"training": 1.0 - duty_tx,
-                                    "training_tx": duty_tx}, hw.power)
-                # solar input flows only outside eclipse; idle is always on
-                budget = hw.power_generation_mw * (1.0 - ecl) - hw.power.idle
-                verdict = "OK" if oap <= budget else \
-                    "OVER BUDGET (expect SoC-gated stalls)"
-                print(f"[hfl] power check: eclipse {ecl:.1%}, schedule adds "
-                      f"{oap:.0f} mW vs {budget:.0f} mW sunlit-average "
-                      f"margin => {verdict}")
+                # each satellite class pays its own duty cycle: check the
+                # schedule against every distinct profile in the fleet
+                for hw in dict.fromkeys(fleet.profiles):
+                    tx_s = float(hw.tx_time(
+                        transmit_bytes(state.params, args.quant_bits) / nc,
+                        "isl"))
+                    duty_tx = min(tx_s / max(h_sync * 1.0, 1e-9), 1.0)
+                    duty = {"training": 1.0 - duty_tx,
+                            "training_tx": duty_tx}
+                    oap = oap_added_mw(duty, hw.power)
+                    # solar input flows only outside eclipse; idle always on
+                    budget = hw.power_generation_mw * (1.0 - ecl) \
+                        - hw.power.idle
+                    ok = power_feasible(duty, hw, eclipse_fraction=ecl)
+                    verdict = "OK" if ok else \
+                        "OVER BUDGET (expect SoC-gated stalls)"
+                    print(f"[hfl] power check [{hw.name}]: eclipse "
+                          f"{ecl:.1%}, schedule adds {oap:.0f} mW vs "
+                          f"{budget:.0f} mW sunlit-average margin => "
+                          f"{verdict}")
         else:
             h_sync = int(args.sync_every)
         # each cluster sees its own (non-IID) stream

@@ -35,11 +35,12 @@ grid cells. ``recover_times`` batches floor-recovery queries the same way.
 (``FLConfig.energy``): a satellite whose SoC is below
 ``min_soc * capacity`` at selection time is masked out of the round.
 
-Heterogeneous fleets: ``EnergyConfig.fleet`` assigns one
-``HardwareProfile`` per satellite (e.g. a mixed FLyCube / S-band smallsat
-constellation), so generation and mode draws differ per satellite while
-the scheduler's link timings still come from the simulation's primary
-profile.
+Heterogeneous fleets: the round engine passes its timing fleet
+(``repro.sim.hardware.FleetProfile``) into :meth:`EnergySim.for_plan`, so
+by default power and link/compute timing bill the *same* per-satellite
+hardware — the shared-fleet invariant. ``EnergyConfig.fleet`` overrides
+the power-side profiles only (a what-if: e.g. degraded panels on an
+otherwise identical fleet).
 """
 from __future__ import annotations
 
@@ -77,9 +78,11 @@ class EnergyConfig:
         engine's only use of the grid). Independent of the contact plan's
         ``dt_s``.
     fleet
-        Optional per-satellite ``HardwareProfile`` tuple (length K) for
-        heterogeneous constellations; ``None`` means every satellite uses
-        the simulation's primary profile.
+        Optional per-satellite ``HardwareProfile`` tuple (length K)
+        overriding the *power-side* hardware only. ``None`` (default)
+        bills the same fleet the round engine times with (the timing
+        fleet passed to ``EnergySim.for_plan``, itself defaulting to the
+        primary profile) — the timing/energy shared-fleet invariant.
     """
     battery_capacity_wh: Union[float, Sequence[float]] = 15.0
     initial_soc: Union[float, Sequence[float]] = 1.0
@@ -169,19 +172,26 @@ class EnergySim:
     @classmethod
     def for_constellation(cls, c: WalkerStar, horizon_s: float,
                           hw: HardwareProfile, cfg: EnergyConfig,
-                          extra_load_mw: float = 0.0) -> "EnergySim":
+                          extra_load_mw: float = 0.0,
+                          fleet: Optional[Sequence[HardwareProfile]] = None
+                          ) -> "EnergySim":
+        """``fleet`` is the round engine's per-satellite timing fleet;
+        profile precedence is ``cfg.fleet`` (power-side override) >
+        ``fleet`` (shared with timing) > ``hw`` replicated."""
         raan, phase, _ = satellite_elements(c)
         times = np.arange(0.0, horizon_s, cfg.eclipse_dt_s)
         ecl = eclipse_series(c, raan, phase, np.radians(c.inclination_deg),
                              times, packed=True)
-        profiles = cfg.fleet if cfg.fleet is not None else (hw,) * c.n_sats
+        profiles = cfg.fleet if cfg.fleet is not None else \
+            (tuple(fleet) if fleet is not None else (hw,) * c.n_sats)
         return cls(times, ecl, profiles, cfg, extra_load_mw=extra_load_mw)
 
     @classmethod
-    def for_plan(cls, plan, hw: HardwareProfile, cfg: EnergyConfig
+    def for_plan(cls, plan, hw: HardwareProfile, cfg: EnergyConfig,
+                 fleet: Optional[Sequence[HardwareProfile]] = None
                  ) -> "EnergySim":
         return cls.for_constellation(plan.constellation, plan.horizon_s,
-                                     hw, cfg)
+                                     hw, cfg, fleet=fleet)
 
     # -- interval layout -------------------------------------------------
     def _build_interval_arrays(self, K, t0, init_sun, trans, offsets):

@@ -16,7 +16,7 @@ from repro.core.autoflsat import AutoFLSat
 from repro.core.contact_plan import ContactPlan, build_contact_plan
 from repro.core.spaceify import ALGORITHMS, FLConfig, RoundRecord
 from repro.data.synthetic import make_federated_dataset
-from repro.sim.hardware import FLYCUBE, HardwareProfile
+from repro.sim.hardware import FLYCUBE, FleetProfile, HardwareProfile
 
 
 @dataclasses.dataclass
@@ -36,6 +36,14 @@ class SimConfig:
     grid step. ``min_elev_deg``: ground-station elevation mask.
     ``fl``: the ``FLConfig`` passed to the algorithm — including
     ``fl.energy`` for battery SoC gating (see ``repro.sim.energy``).
+    ``fleet``: optional per-satellite hardware for a heterogeneous
+    constellation — a length-K ``HardwareProfile`` sequence or a
+    ``FleetProfile`` (e.g. ``mixed_fleet((FLYCUBE, SMALLSAT_SBAND), K)``).
+    Each satellite is then timed with its own link rates and epoch time,
+    and — with ``fl.energy`` set — billed with its own power figures (the
+    shared-fleet invariant). ``None`` uses the uniform ``hw`` profile
+    passed to ``FLySTacK`` (default FLYCUBE), which is bitwise-identical
+    to the primary-profile engine.
     ``epochs_mode``: AutoFLSat only — "fixed" uses ``fl.epochs``, "auto"
     derives the budget from the ISL exchange schedule (Algorithm 2).
     ``seed``: dataset partition seed (``fl.seed`` drives training).
@@ -52,6 +60,7 @@ class SimConfig:
     alpha: float = 0.5                   # dirichlet non-IID skew
     min_elev_deg: float = 10.0           # GS elevation mask
     fl: FLConfig = dataclasses.field(default_factory=FLConfig)
+    fleet: Optional[object] = None       # per-sat profiles / FleetProfile
     epochs_mode: str = "fixed"           # autoflsat: "fixed" | "auto"
     seed: int = 0
 
@@ -117,7 +126,11 @@ class FLySTacK:
     def __init__(self, cfg: SimConfig, hw: HardwareProfile = FLYCUBE,
                  plan: Optional[ContactPlan] = None):
         self.cfg = cfg
-        self.hw = hw
+        K = cfg.n_clusters * cfg.sats_per_cluster
+        # SimConfig.fleet (heterogeneous per-satellite hardware) wins over
+        # the uniform hw profile; the algorithms accept either form.
+        self.hw = FleetProfile.build(cfg.fleet, K) \
+            if cfg.fleet is not None else hw
         needs_isl = cfg.algorithm == "autoflsat"
         self.plan = plan if plan is not None else build_contact_plan(
             cfg.n_clusters, cfg.sats_per_cluster, cfg.n_ground_stations,

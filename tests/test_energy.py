@@ -73,9 +73,31 @@ def test_oap_added_matches_table2_worked_example():
 
 def test_power_feasible_thresholds():
     duty = {"training": 0.8, "training_tx": 0.2}   # 760 + 2370 = 3130 mW
-    assert power_feasible(duty, FLYCUBE)           # 4 W generation
+    # seed convention: generation read as an orbital average => feasible
+    assert power_feasible(duty, FLYCUBE, eclipse_fraction=0.0)
     starved = dataclasses.replace(FLYCUBE, power_generation_mw=3000.0)
-    assert not power_feasible(duty, starved)
+    assert not power_feasible(duty, starved, eclipse_fraction=0.0)
+
+
+def test_power_feasible_eclipse_derate_matches_integrator_finding():
+    """Table 2's worked example: statically feasible on the orbital-average
+    reading, but the 4 W figure is *sunlit* output — derated by the
+    analytic asin(R_E/a)/pi arc (~37.8% at 500 km) the average input is
+    ~2.5 W < 3.13 W, matching the PR 3 integrator finding that the duty
+    cycle drains the battery. The derate is now the default."""
+    from repro.sim.hardware import analytic_eclipse_fraction
+    duty = {"training": 0.8, "training_tx": 0.2}
+    ecl = analytic_eclipse_fraction()
+    expect = np.arcsin(R_EARTH / (R_EARTH + 500e3)) / np.pi
+    assert ecl == pytest.approx(expect)            # ~0.378
+    assert not power_feasible(duty, FLYCUBE)       # default = derated
+    assert power_feasible(duty, FLYCUBE, eclipse_fraction=ecl) == \
+        power_feasible(duty, FLYCUBE)
+    # a big enough panel clears the derated bar: need idle + oap <= gen*(1-e)
+    big = dataclasses.replace(FLYCUBE, power_generation_mw=5100.0)
+    assert power_feasible(duty, big)
+    # no-eclipse orbit degenerates to the orbital-average check
+    assert power_feasible(duty, FLYCUBE, eclipse_fraction=0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +256,105 @@ def test_autoflsat_masks_drained_satellite():
     assert recs[0].participants == [0]
     assert recs[0].skipped_low_power == 1
     assert recs[0].energy_wh > 0.0
+
+
+def _billing_hw(tx_bytes: float, training_mw: float):
+    """One-satellite FedBuff billing fixture: epoch_time 2000 s clips every
+    orbit-derived budget to exactly 1 epoch (train = 2000 s/episode), the
+    uplink rate makes t_up exactly 450 s, the downlink is effectively free,
+    and idle draw/solar generation are zero unless overridden — so the SoC
+    moves ONLY through bill_activity and every number is hand-checkable."""
+    return HardwareProfile(
+        name="bill", epoch_time_s=2000.0,
+        downlink_rate_bps=8e12, uplink_rate_bps=tx_bytes * 8.0 / 450.0,
+        isl_rate_bps=8e12,
+        power=PowerModes(idle=0.0, radio_tx=36_000.0,
+                         training=training_mw, training_tx=36_000.0),
+        power_generation_mw=0.0)
+
+
+def test_fedbuff_pickup_uplink_not_billed_before_it_happens():
+    """The stand-down decision at a return contact must be made on the
+    energy actually spent so far — this episode's seed uplink, training,
+    and the downlink that just happened (5.5 Wh, leaving 4.5 >= the 4 Wh
+    floor) — NOT also the NEXT pickup's uplink, which has not happened
+    yet (pre-billing it, as the seed engine did, would wrongly stand the
+    client down at 0 Wh). The next pickup is then billed at the contact
+    where it happens, taking the battery to exactly 0 — allowed, and
+    caught at that episode's own return. (The horizon leaves room for the
+    next episode's return: a client with no remaining return contact
+    performs no pickup and is billed no uplink.)"""
+    plan = _dense_plan(K=1, horizon=12_000.0, every=1000.0, dur=10.0)
+    ds = make_federated_dataset("femnist", 1, 16)
+    probe = FedBuffSat(plan, _FAST_HW, ds, _cfg())
+    hw = _billing_hw(probe.tx_bytes, training_mw=1800.0)  # 1 Wh / episode
+    e = EnergyConfig(battery_capacity_wh=10.0, initial_soc=1.0, min_soc=0.4)
+    algo = FedBuffSat(plan, hw, ds,
+                      _cfg(max_rounds=1, buffer_size=1, energy=e))
+    recs = algo.run()
+    assert len(recs) == 1
+    up_wh = 450.0 * 36_000.0 / 3.6e6                      # 4.5 Wh
+    train_wh = 2000.0 * 1800.0 / 3.6e6                    # 1.0 Wh
+    assert recs[0].skipped_low_power == 0                 # 4.5 Wh >= floor
+    # billed: seed uplink + train + downlink, then the next pickup's up
+    assert recs[0].energy_wh == pytest.approx(2 * up_wh + train_wh,
+                                              abs=0.01)
+    assert algo.energy.soc_wh[0] == pytest.approx(
+        10.0 - 2 * up_wh - train_wh, abs=0.01)
+
+
+def test_fedbuff_no_pickup_billed_when_no_return_contact_remains():
+    """A client whose next episode has no return contact drops out without
+    picking up — so its first episode bills exactly seed uplink + train +
+    downlink and no NEXT pickup uplink (symmetric with the deferred path,
+    where an unreachable post-recovery pickup is also free). Here the
+    horizon ends right after the first return."""
+    plan = _dense_plan(K=1, horizon=6000.0, every=1000.0, dur=10.0)
+    ds = make_federated_dataset("femnist", 1, 16)
+    probe = FedBuffSat(plan, _FAST_HW, ds, _cfg())
+    hw = _billing_hw(probe.tx_bytes, training_mw=1800.0)  # 1 Wh / episode
+    e = EnergyConfig(battery_capacity_wh=10.0, initial_soc=1.0, min_soc=0.5)
+    algo = FedBuffSat(plan, hw, ds,
+                      _cfg(max_rounds=1, buffer_size=1, energy=e))
+    recs = algo.run()
+    assert len(recs) == 1
+    up_wh = 450.0 * 36_000.0 / 3.6e6                      # 4.5 Wh
+    train_wh = 2000.0 * 1800.0 / 3.6e6                    # 1.0 Wh
+    assert recs[0].energy_wh == pytest.approx(up_wh + train_wh, abs=0.01)
+    assert algo.energy.soc_wh[0] == pytest.approx(
+        10.0 - up_wh - train_wh, abs=0.01)
+
+
+def test_fedbuff_deferred_pickup_uplink_billed_after_recovery():
+    """A drained client's deferred pickup is billed at its post-recovery
+    contact (via the next processed return), not at the stand-down return
+    — where the 4.5 Wh charge would have vanished into the SoC clamp and
+    distorted the recovery estimate. Every episode's bill is then uplink
+    (seed / deferred) + train + downlink; the stand-down itself pushes
+    the second episode past the battery's recharge to the floor."""
+    plan = _dense_plan(K=1, horizon=86_400.0, every=1000.0, dur=10.0)
+    ds = make_federated_dataset("femnist", 1, 16)
+    probe = FedBuffSat(plan, _FAST_HW, ds, _cfg())
+    hw = dataclasses.replace(
+        _billing_hw(probe.tx_bytes, training_mw=9000.0),  # 5 Wh / episode
+        power_generation_mw=1440.0)           # sunlit recharge, 0.4 Wh/ks
+    e = EnergyConfig(battery_capacity_wh=40.0, initial_soc=0.4,  # 16 Wh
+                     min_soc=0.3)                                # 12 Wh
+    algo = FedBuffSat(plan, hw, ds,
+                      _cfg(max_rounds=2, buffer_size=1, energy=e))
+    recs = algo.run()
+    assert len(recs) == 2
+    up_wh = 450.0 * 36_000.0 / 3.6e6                      # 4.5 Wh
+    train_wh = 2000.0 * 9000.0 / 3.6e6                    # 5.0 Wh
+    # episode 1 bills seed up + train + down = 9.5 Wh: 16 - 9.5 = 6.5 Wh
+    # < the 12 Wh floor => stand down; the NEXT pickup is NOT billed here
+    assert recs[0].skipped_low_power == 1
+    assert recs[0].energy_wh == pytest.approx(up_wh + train_wh, abs=0.01)
+    # episode 2 (post-recovery pickup): the deferred uplink + train + down
+    assert recs[1].energy_wh == pytest.approx(up_wh + train_wh, abs=0.01)
+    # the deferral really pushed the second episode past battery recovery
+    # (recharging 6.5 -> 12 Wh at 0.4 Wh per sunlit kilosecond)
+    assert recs[1].t_end - recs[0].t_end > 10_000.0
 
 
 def test_fedbuff_drops_unrecoverable_client():

@@ -186,6 +186,39 @@ def test_fedprox_ends_only_when_nobody_returns():
 
 
 # ---------------------------------------------------------------------------
+# idle accounting: in-window return contacts must not go negative
+# ---------------------------------------------------------------------------
+
+
+def test_fedavg_idle_clamped_on_in_window_return():
+    """A return window already open at train end contributes ZERO idle —
+    FedAvgSat now clamps like FedProxSat always did (the seed's unclamped
+    ``ret_avail - train_end`` was the negative-idle hazard). With one long
+    window covering the whole round, idle is exactly the initial contact
+    wait (0 here) and must never be negative."""
+    c = WalkerStar(1, 1)
+    plan1 = ContactPlan(constellation=c, horizon_s=50_000.0,
+                        sat_windows=[[(0.0, 40_000.0, 0)]],
+                        cluster_of=np.array([0]), pair_windows={})
+    ds1 = make_federated_dataset("femnist", 1, 16)
+    cfg = _cfg(clients_per_round=1, epochs=2, batch_size=8, max_rounds=2)
+    algo = FedAvgSat(plan1, _FAST_HW, ds1, cfg)
+    recs = algo.run()
+    assert len(recs) >= 1
+    for r in recs:
+        assert r.idle_s == 0.0          # in-window return: no idle at all
+    # the formulas stay aligned: FedProxSat on the same plan is also >= 0
+    prox = FedProxSat(plan1, _FAST_HW, ds1, cfg)
+    assert all(r.idle_s >= 0.0 for r in prox.run())
+
+
+def test_idle_never_negative_across_algorithms(plan, ds):
+    for cls in (FedAvgSat, FedProxSat, FedBuffSat, AutoFLSat):
+        algo = cls(plan, SMALLSAT_SBAND, ds, _cfg())
+        assert all(r.idle_s >= 0.0 for r in algo.run())
+
+
+# ---------------------------------------------------------------------------
 # live quantized transmission path (QuAFL) through quant_agg
 # ---------------------------------------------------------------------------
 

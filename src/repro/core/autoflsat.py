@@ -33,6 +33,9 @@ class InterSLSchedule:
     t_complete: float          # all pairwise exchanges done
     epochs: int                # training budget derived from the schedule
     passes: List[Tuple[int, int, float]]   # (ci, cj, t_exchange)
+    # fault accounting (zeros when FLConfig.faults is off)
+    dropped_contacts: int = 0          # ISL hop attempts lost to drops
+    retransmit_bytes: float = 0.0      # re-billed bytes of retried hops
 
 
 def _fleet_mean(a) -> float:
@@ -83,10 +86,17 @@ class AutoFLSat(SpaceifiedFL):
         tx = {(ci, cj):
               self.tx_bytes * 8.0 / min(rate_c[ci], rate_c[cj]) * 2.0
               for ci in range(C) for cj in range(ci + 1, C)}  # bidirectional
-        chained = self.plan.chain_pair_transfers(t, tx)
-        if chained is None:
-            return None
-        t_cur, passes = chained
+        drops, rebill = 0, 0.0
+        if self.faults is None:
+            chained = self.plan.chain_pair_transfers(t, tx)
+            if chained is None:
+                return None
+            t_cur, passes = chained
+        else:
+            chained = self._chain_pair_transfers_faulted(t, tx)
+            if chained is None:
+                return None
+            t_cur, passes, drops, rebill = chained
         if self.epochs_mode == "auto":
             # epochs from first & last comms record (Algorithm 2); the
             # budget must fit the slowest ML unit so tier 1 stays in sync
@@ -95,7 +105,37 @@ class AutoFLSat(SpaceifiedFL):
             e = min(e, self.cfg.max_local_epochs)
         else:
             e = self.cfg.epochs
-        return InterSLSchedule(t, t_cur, e, passes)
+        return InterSLSchedule(t, t_cur, e, passes, drops, rebill)
+
+    def _chain_pair_transfers_faulted(self, t: float, tx: dict):
+        """Fault-aware pair chain: each ISL hop's transmission attempt
+        may drop independently (``faults.pair_dropped``, keyed by the
+        attempt time, so every retry is a fresh seeded draw). A dropped
+        hop spends its airtime, re-bills the pair's bytes both ways, and
+        stalls the cluster sync until the next pair window accumulates
+        the airtime again. Returns (t_complete, passes, dropped_hops,
+        retransmit_bytes) or None when a hop runs out of windows."""
+        C = self.n_clusters
+        t_cur = t
+        passes: List[Tuple[int, int, float]] = []
+        drops, rebill = 0, 0.0
+        for ci in range(C):
+            for cj in range(ci + 1, C):
+                dur = tx[(ci, cj)]
+                while True:
+                    done = self.plan.transmit_over_pair(ci, cj, t_cur, dur)
+                    if done is None:
+                        return None
+                    if not self.faults.pair_dropped(ci, cj, t_cur):
+                        passes.append((ci, cj, t_cur))
+                        t_cur = done
+                        break
+                    drops += 1
+                    rebill += 2.0 * self.tx_bytes   # both directions lost
+                    t_cur = done    # airtime was spent: stall to the next
+                    #                 window (done > attempt start, so the
+                    #                 retry walk always terminates)
+        return t_cur, passes, drops, rebill
 
     # ------------------------------------------------------------------
     def run_round(self, r, t):
@@ -114,12 +154,35 @@ class AutoFLSat(SpaceifiedFL):
         if self.energy is not None:
             self.energy.advance_to(t)
             energy_ok = self.energy.eligible()
+        # fault gating composes by boolean AND into the same mask (order
+        # immaterial): members inside an outage at round start, or reset
+        # by radiation before their train+exchange completes, carry zero
+        # weight in the cluster mean. ``ok is None`` == everyone in.
+        K = C * spc
+        train_time_k = self.fleet.train_time(sched.epochs)   # (K,)
+        intra_comm_k = self._t_isl_k * 2.0                   # bidirectional
+        done_k = t + train_time_k + intra_comm_k
+        ok = energy_ok
+        n_flt = 0
+        if self.faults is not None:
+            fault_ok = self.faults.available(t)
+            if self.faults.cfg.has_resets:
+                fault_ok = fault_ok & (self.faults.resets_between(
+                    np.arange(K), t, done_k) == 0)
+            n_flt = int(np.sum(~fault_ok)) if ok is None \
+                else int(np.sum(ok & ~fault_ok))
+            # an all-True fault mask is not folded in: with energy off the
+            # round must keep ok=None and take the exact segment_mean
+            # tier-2 path, so a never-firing FaultConfig stays
+            # bitwise-identical to faults=None (weighted mean with all-one
+            # weights is not an IEEE identity for the plain mean)
+            if not bool(fault_ok.all()):
+                ok = fault_ok if ok is None else ok & fault_ok
 
         # tier 1: synchronous intra-cluster FL (all satellites participate)
         # as ONE (C*spc)-wide vmapped dispatch + a segment-wise cluster
         # aggregation — no per-cluster Python loop, so the trainer compiles
         # once for the whole constellation.
-        K = C * spc
         ks = jax.random.split(self.key, K + 1)
         self.key = ks[0]
         keys = ks[1:]                        # sat (c, s) gets row c*spc + s
@@ -138,7 +201,7 @@ class AutoFLSat(SpaceifiedFL):
 
         # tier 2: all-to-all exchange -> constellation-wide model (the
         # exchanged cluster models cross ISLs quantized when quant_bits>0)
-        if energy_ok is None:
+        if ok is None:
             stacked_clusters = segment_mean(trained, C)
             self.global_params = self._aggregate(
                 stacked_clusters, np.full(C, float(spc)))
@@ -146,7 +209,7 @@ class AutoFLSat(SpaceifiedFL):
                 lambda g: jnp.broadcast_to(g, (C,) + g.shape),
                 self.global_params)
         else:
-            w = energy_ok.astype(np.float64)
+            w = ok.astype(np.float64)
             seg_w = w.reshape(C, spc).sum(1)   # eligible sats per cluster
             if seg_w.sum() > 0:
                 stacked_clusters = segment_weighted_mean(
@@ -167,11 +230,8 @@ class AutoFLSat(SpaceifiedFL):
         # the round it sits out; the tier-2 pair schedule stays the
         # conservative whole-cluster bottleneck, since the orbital
         # exchange slots are fixed before SoC is known).
-        train_time_k = self.fleet.train_time(e)            # (K,)
-        intra_comm_k = self._t_isl_k * 2.0                 # (K,) bidirectional
-        done_k = t + train_time_k + intra_comm_k
-        if energy_ok is not None and energy_ok.any():
-            t_train_done = float(np.max(done_k[energy_ok]))
+        if ok is not None and ok.any():
+            t_train_done = float(np.max(done_k[ok]))
         else:
             t_train_done = float(np.max(done_k))
         t_round_end = max(sched.t_complete, t_train_done)
@@ -179,9 +239,10 @@ class AutoFLSat(SpaceifiedFL):
         K = plan.constellation.n_sats
         participants = list(range(K))
         wh, skipped = 0.0, 0
+        if ok is not None:
+            participants = [k for k in range(K) if ok[k]]
         if energy_ok is not None:
-            participants = [k for k in range(K) if energy_ok[k]]
-            skipped = K - len(participants)
+            skipped = int(np.sum(~energy_ok))
             self.energy.advance_to(t_round_end)
             ksel = np.asarray(participants, np.int64)
             wh = self.energy.bill_activity(
@@ -205,4 +266,7 @@ class AutoFLSat(SpaceifiedFL):
                            epochs=float(e), energy_wh=wh,
                            skipped_low_power=skipped,
                            comm_s_by_sat={k: float(comm_k[k])
-                                          for k in participants})
+                                          for k in participants},
+                           skipped_faulted=n_flt,
+                           dropped_contacts=sched.dropped_contacts,
+                           retransmit_bytes=sched.retransmit_bytes)

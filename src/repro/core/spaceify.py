@@ -95,6 +95,7 @@ from repro.core.contact_plan import ContactPlan
 from repro.core.quantize import quantize_roundtrip, transmit_bytes
 from repro.models.small import MODELS, accuracy
 from repro.sim.energy import EnergyConfig, EnergySim
+from repro.sim.faults import FaultConfig, FaultSim
 from repro.sim.hardware import FleetProfile, HardwareProfile
 
 
@@ -121,6 +122,11 @@ class RoundRecord:
     # per-participant communication seconds {sat: s} — on a heterogeneous
     # fleet, slow-radio satellites show proportionally larger entries
     comm_s_by_sat: Dict[int, float] = dataclasses.field(default_factory=dict)
+    # fault accounting (``FLConfig.faults``; all zeros when faults are off)
+    skipped_faulted: int = 0       # outage-masked candidates + wiped/lost
+                                   # updates this round
+    dropped_contacts: int = 0      # transmission attempts lost to drops
+    retransmit_bytes: float = 0.0  # bytes re-billed by retried transmissions
 
 
 @dataclasses.dataclass
@@ -163,7 +169,7 @@ class FLConfig:
         server's dequantize+accumulate: "auto" (Pallas on TPU, jnp
         elsewhere) | "pallas" | "pallas_interpret" | "jnp".
 
-    Energy (this PR)
+    Energy
         ``energy``: ``repro.sim.energy.EnergyConfig`` enabling battery
         state-of-charge gating — satellites below the SoC floor at
         selection time are masked out (an extra eligibility mask on the
@@ -173,7 +179,25 @@ class FLConfig:
         modeling entirely and is guaranteed bitwise-identical to the
         pre-energy engine.
 
-    ``seed`` drives the PRNG key stream for init + minibatch order.
+    Faults (this PR)
+        ``faults``: ``repro.sim.faults.FaultConfig`` enabling fault
+        injection — seeded per-satellite outages (ANDed into the same
+        eligibility mask as the energy gate; mask composition is
+        commutative, see docs/ARCHITECTURE.md), per-contact transmission
+        drops (retried at the next usable window with the bytes
+        re-billed), radiation resets (local state wiped, in-flight update
+        lost), and the optional IWQoS'23 energy-drain attack (requires
+        ``energy`` — the attack drains batteries). ``None`` (default)
+        disables every fault path and is bitwise-identical to the
+        fault-free engine.
+
+    RNG convention: ``seed`` drives the JAX PRNG key stream for model
+    init + minibatch order; ``faults.seed`` drives a *separate*
+    ``np.random.default_rng`` stream for every fault draw (outages,
+    resets, per-contact drops). The two streams never mix — enabling or
+    reseeding faults never perturbs training randomness, and fault draws
+    are counter-based per satellite/contact, so they are reproducible
+    across engines and independent of query order.
     """
     model: str = "cnn"
     clients_per_round: int = 10          # C (static cohort width)
@@ -194,6 +218,7 @@ class FLConfig:
     seed: int = 0
     eval_every: int = 1
     energy: Optional[EnergyConfig] = None   # battery SoC gating (off = None)
+    faults: Optional[FaultConfig] = None    # fault injection (off = None)
 
 
 def _model_tx_bytes(params, cfg: FLConfig) -> float:
@@ -228,12 +253,24 @@ class SpaceifiedFL:
         # battery SoC gating (FLConfig.energy); None => engine is bitwise
         # identical to the pre-energy path (nothing below ever consults it)
         self.energy: Optional[EnergySim] = None
+        # fault injection (FLConfig.faults); None => every fault branch
+        # below is dead and the engine is bitwise-identical to fault-free
+        self.faults: Optional[FaultSim] = None
+        attack = None
+        if cfg.faults is not None:
+            if cfg.faults.attack is not None and cfg.energy is None:
+                raise ValueError(
+                    "FaultConfig.attack requires FLConfig.energy: the "
+                    "energy-drain attack targets batteries")
+            attack = cfg.faults.attack
+            self.faults = FaultSim.for_plan(plan, cfg.faults)
         if cfg.energy is not None:
             # shared-fleet invariant: unless EnergyConfig.fleet overrides,
             # the battery bills the same per-satellite hardware that the
             # timing above schedules with
             self.energy = EnergySim.for_plan(plan, self.hw, cfg.energy,
-                                             fleet=self.fleet.profiles)
+                                             fleet=self.fleet.profiles,
+                                             attack=attack)
 
     # -- timing helpers -------------------------------------------------
     def _t_up(self):
@@ -283,11 +320,20 @@ class SpaceifiedFL:
             energy_ok = self.energy.eligible()
         else:
             energy_ok = np.ones(len(orbit_valid), bool)
+        if self.faults is not None:
+            # outage gating: a satellite inside a fault outage at selection
+            # time is masked exactly like one below the battery floor —
+            # boolean AND into the same validity mask (composition order
+            # is immaterial), zero-weight pad slot, no retracing.
+            fault_ok = self.faults.available(t)
+        else:
+            fault_ok = np.ones(len(orbit_valid), bool)
         return {"contact_avail": avail, "contact_end": end, "contact_gs": gs,
                 "recv_end": recv_end, "train_end": train_end,
                 "ret_avail": r_avail, "ret_end": r_end, "ret_gs": r_gs,
-                "relay": relay, "valid": orbit_valid & energy_ok,
-                "orbit_valid": orbit_valid, "energy_ok": energy_ok}
+                "relay": relay, "valid": orbit_valid & energy_ok & fault_ok,
+                "orbit_valid": orbit_valid, "energy_ok": energy_ok,
+                "fault_ok": fault_ok}
 
     def _select_from_projections(self, proj) -> List[int]:
         cfg = self.cfg
@@ -361,13 +407,112 @@ class SpaceifiedFL:
         n_k[:m] = self.ds.n_per_client
         return trained, n_k
 
+    # -- fault resolution ------------------------------------------------
+    def _next_available_contact(self, k: int, t: float):
+        """``plan.next_contact`` that skips windows the satellite spends
+        inside a fault outage (plain ``next_contact`` when faults — or
+        outages — are off, so the fault-free path is untouched). A window
+        whose outage ends mid-window starts late at the recovery time."""
+        if not np.isfinite(t):
+            return None
+        if self.faults is None or not self.faults.cfg.has_outages:
+            return self.plan.next_contact(k, t)
+        tq = float(t)
+        while True:
+            w = self.plan.next_contact(k, tq)
+            if w is None:
+                return None
+            up = float(self.faults.next_up(np.array([k]),
+                                           np.array([w[0]]))[0])
+            if up <= w[0]:
+                return w
+            if up < w[1]:
+                return (up, w[1], w[2])
+            tq = up                 # strictly past w[0]: walk terminates
+
+    def _walk_drops(self, k: int, t_first: float):
+        """Drop-retry walk of ``k``'s downlink from the usable window at
+        ``t_first``: each dropped attempt spends its airtime and retries
+        at the next usable window. Returns ``(t_done, drops, rebill_bytes,
+        lost)`` — ``drops`` counts lost attempts, ``rebill_bytes`` bills
+        every attempt beyond the first, ``lost=True`` when the horizon
+        runs out of windows before a delivery."""
+        t_down = float(self._t_down_k[k])
+        t_try, drops = float(t_first), 0
+        while self.faults.contact_dropped(k, t_try):
+            drops += 1
+            w = self._next_available_contact(k, t_try + t_down)
+            if w is None:
+                return (t_try + t_down, drops,
+                        max(drops - 1, 0) * self.tx_bytes, True)
+            t_try = float(w[0])
+        return t_try + t_down, drops, drops * self.tx_bytes, False
+
+    def _faulted_return_legs(self, ks, recv_end, train_end, ends, comms):
+        """Re-resolve the selected cohort's return downlinks under faults
+        (sync engines; only called when ``self.faults`` is set).
+
+        Per client: the first *usable* return window at/after train end
+        (outages can push it past the fault-free projection), then the
+        drop-retry walk, then the radiation check — a reset anywhere in
+        (recv_end, delivery] wipes the update. Billing rules (documented
+        in docs/ARCHITECTURE.md): a delivered update with d drops bills
+        uplink + (d+1) downlinks and re-bills d×tx_bytes; a client whose
+        windows run out mid-walk bills the d attempts that really keyed
+        the radio; a wiped client bills its uplink only (the reset, not
+        the radio, lost the update). Every non-delivered client
+        contributes aggregation weight 0.
+
+        Returns ``(delivered (m,) 0/1 floats, ends, comms, n_faulted,
+        drops, rebill_bytes)`` with ``ends``/``comms`` updated copies."""
+        m = len(ks)
+        delivered = np.ones(m)
+        ends, comms = ends.copy(), comms.copy()
+        n_faulted, drops_total, rebill_total = 0, 0, 0.0
+        check_resets = self.faults.cfg.has_resets
+        for i in range(m):
+            k = int(ks[i])
+            t_up = float(self._t_up_k[k])
+            w0 = self._next_available_contact(k, float(train_end[i]))
+            if w0 is None:          # outages outlast every return window
+                delivered[i], n_faulted = 0.0, n_faulted + 1
+                ends[i], comms[i] = float(train_end[i]), t_up
+                continue
+            t_done, d, rb, lost = self._walk_drops(k, float(w0[0]))
+            if lost:
+                delivered[i], n_faulted = 0.0, n_faulted + 1
+                ends[i], comms[i] = t_done, t_up + d * float(
+                    self._t_down_k[k])
+                drops_total += d
+                rebill_total += rb
+                continue
+            if check_resets and self.faults.reset_in(
+                    k, float(recv_end[i]), t_done):
+                delivered[i], n_faulted = 0.0, n_faulted + 1
+                ends[i], comms[i] = t_done, t_up
+                continue
+            ends[i] = t_done
+            comms[i] += d * float(self._t_down_k[k])
+            drops_total += d
+            rebill_total += rb
+        return delivered, ends, comms, n_faulted, drops_total, rebill_total
+
+    def _selection_faulted(self, proj) -> int:
+        """Candidates masked *only* by an outage at selection time."""
+        if self.faults is None:
+            return 0
+        return int(np.sum(proj["orbit_valid"] & proj["energy_ok"]
+                          & ~proj["fault_ok"]))
+
     # -- energy accounting ----------------------------------------------
     def _post_recovery_contact(self, k: int, t: float):
         """Stand-down policy for a drained satellite: its earliest GS
         contact at/after battery recovery (idle + solar only), or None if
-        the battery never clears the floor."""
+        the battery never clears the floor. Fault-aware: the post-recovery
+        contact must also fall outside any outage."""
         rt = self.energy.recover_time(k)
-        return None if rt is None else self.plan.next_contact(k, max(rt, t))
+        return None if rt is None else \
+            self._next_available_contact(k, max(rt, t))
 
     def _round_energy(self, proj, ks, trains, comms, t_round_end):
         """Advance the fleet's batteries to the round end (idle draw +
@@ -419,7 +564,6 @@ class FedAvgSat(SpaceifiedFL):
         # train selected clients (padded cohort, same epoch count:
         # synchronous)
         trained, n_k = self._train_cohort(sel, cfg.epochs)
-        self.global_params = self._aggregate(trained, n_k)
 
         ks = np.asarray(sel)
         ends = proj["ret_avail"][ks] + self._t_down_k[ks]
@@ -429,7 +573,19 @@ class FedAvgSat(SpaceifiedFL):
             + np.maximum(proj["ret_avail"][ks] - proj["train_end"][ks], 0.0)
         comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = proj["train_end"][ks] - proj["recv_end"][ks]
-        t_round_end = float(ends.max())
+        n_flt, drops, rebill = 0, 0, 0.0
+        if self.faults is None:
+            t_round_end = float(ends.max())
+        else:
+            delivered, ends, comms, n_flt, drops, rebill = \
+                self._faulted_return_legs(ks, proj["recv_end"][ks],
+                                          proj["train_end"][ks], ends, comms)
+            n_k[:len(sel)] *= delivered    # lost/wiped updates: weight 0
+            n_flt += self._selection_faulted(proj)
+            got = delivered > 0            # the server waits for deliveries
+            t_round_end = float(ends[got].max() if got.any() else ends.max())
+        if float(n_k.sum()) > 0.0:         # always true when faults are off
+            self.global_params = self._aggregate(trained, n_k)
         wh, skipped = self._round_energy(proj, ks, trains, comms, t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
@@ -438,7 +594,9 @@ class FedAvgSat(SpaceifiedFL):
                            float(np.mean(trains)), acc, sel,
                            epochs=cfg.epochs, energy_wh=wh,
                            skipped_low_power=skipped,
-                           comm_s_by_sat=dict(zip(sel, comms.tolist())))
+                           comm_s_by_sat=dict(zip(sel, comms.tolist())),
+                           skipped_faulted=n_flt, dropped_contacts=drops,
+                           retransmit_bytes=rebill)
 
 
 class FedProxSat(SpaceifiedFL):
@@ -470,14 +628,27 @@ class FedProxSat(SpaceifiedFL):
                      floor_ep, cfg.max_local_epochs).astype(np.int32)
         train_end = recv_end + self.fleet.epoch_time_s[ks] * ep
         trained, n_k = self._train_cohort(sel, ep, prox=True)
-        self.global_params = self._aggregate(trained, n_k)
 
         ends = projf["ret_avail"][ks] + self._t_down_k[ks]
         idles = (projf["contact_avail"][ks] - t) \
             + np.maximum(projf["ret_avail"][ks] - train_end, 0.0)
         comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = train_end - recv_end
-        t_round_end = float(ends.max())
+        n_flt, drops, rebill = 0, 0, 0.0
+        if self.faults is None:
+            t_round_end = float(ends.max())
+        else:
+            # epoch budgets keep the fault-free projection (the client
+            # cannot foresee faults); only the return leg is re-resolved
+            delivered, ends, comms, n_flt, drops, rebill = \
+                self._faulted_return_legs(ks, recv_end, train_end,
+                                          ends, comms)
+            n_k[:len(sel)] *= delivered
+            n_flt += self._selection_faulted(projf)
+            got = delivered > 0
+            t_round_end = float(ends[got].max() if got.any() else ends.max())
+        if float(n_k.sum()) > 0.0:
+            self.global_params = self._aggregate(trained, n_k)
         wh, skipped = self._round_energy(projf, ks, trains, comms,
                                          t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
@@ -487,7 +658,9 @@ class FedProxSat(SpaceifiedFL):
                            float(np.mean(trains)), acc, sel,
                            epochs=float(np.mean(ep)), energy_wh=wh,
                            skipped_low_power=skipped,
-                           comm_s_by_sat=dict(zip(sel, comms.tolist())))
+                           comm_s_by_sat=dict(zip(sel, comms.tolist())),
+                           skipped_faulted=n_flt, dropped_contacts=drops,
+                           retransmit_bytes=rebill)
 
 
 class FedBuffSat(SpaceifiedFL):
@@ -520,6 +693,11 @@ class FedBuffSat(SpaceifiedFL):
         # pickup's contact, so every episode's bill is uplink + training
         # + downlink, each at (or after) the contact where it happened.
         deferred_up: Dict[int, float] = {}
+        # fault bookkeeping: pickup contact time of each pending episode
+        # (radiation resets in (pickup, return] wipe it) and the drop walk
+        # resolved at scheduling time (drops, re-billed bytes)
+        pickup_t: Dict[int, float] = {}
+        meta_of: Dict[int, tuple] = {}
         # seed the fleet with one batched contact-plan pass: drained
         # satellites query from their (batched) battery-recovery time
         # instead of t0 — satellites that never recover get an inf query,
@@ -532,62 +710,118 @@ class FedBuffSat(SpaceifiedFL):
                 rts = self.energy.recover_times(drained)
                 tq[drained] = np.where(np.isfinite(rts),
                                        np.maximum(rts, t0), np.inf)
-        avail, _, _, valid = plan.next_contacts(tq)
-        recv_end_k = avail + self._t_up_k
-        ret_avail, _, _, ret_valid = plan.next_contacts(
-            np.where(valid, recv_end_k + ep_s, np.inf))
-        for k in range(K):
-            if not (valid[k] and ret_valid[k]):
-                continue
-            recv_end, ret0 = float(recv_end_k[k]), float(ret_avail[k])
-            ep = int(np.clip((ret0 - recv_end) // ep_s[k], 1,
-                             cfg.max_local_epochs))
-            heapq.heappush(heap, (ret0 + float(self._t_down_k[k]), k))
-            client_params[k] = self._tx_global()
-            pickup_round[k] = 0
-            epochs_of[k] = ep
-            idle_of[k] = max(ret0 - (recv_end + ep * float(ep_s[k])), 0.0)
-            if self.energy is not None:     # the seed pickup's uplink
-                deferred_up[k] = float(self._t_up_k[k])
+        if self.faults is None:
+            avail, _, _, valid = plan.next_contacts(tq)
+            recv_end_k = avail + self._t_up_k
+            ret_avail, _, _, ret_valid = plan.next_contacts(
+                np.where(valid, recv_end_k + ep_s, np.inf))
+            for k in range(K):
+                if not (valid[k] and ret_valid[k]):
+                    continue
+                recv_end, ret0 = float(recv_end_k[k]), float(ret_avail[k])
+                ep = int(np.clip((ret0 - recv_end) // ep_s[k], 1,
+                                 cfg.max_local_epochs))
+                heapq.heappush(heap, (ret0 + float(self._t_down_k[k]), k))
+                client_params[k] = self._tx_global()
+                pickup_round[k] = 0
+                epochs_of[k] = ep
+                idle_of[k] = max(ret0 - (recv_end + ep * float(ep_s[k])),
+                                 0.0)
+                if self.energy is not None:     # the seed pickup's uplink
+                    deferred_up[k] = float(self._t_up_k[k])
+        else:
+            # fault-aware seed: outage-delayed pickups, outage-skipping
+            # return windows, and the drop walk resolved at scheduling
+            # time (the trained content never depends on the return time,
+            # so resolving drops early is equivalent; staleness accrues
+            # naturally from the later event time).
+            tq = self.faults.next_up(np.arange(K), tq)
+            for k in range(K):
+                w = self._next_available_contact(k, float(tq[k]))
+                if w is None:
+                    continue
+                recv_end = float(w[0]) + float(self._t_up_k[k])
+                nxt = self._next_available_contact(
+                    k, recv_end + float(ep_s[k]))
+                if nxt is None:
+                    continue
+                ep = int(np.clip((nxt[0] - recv_end) // ep_s[k], 1,
+                                 cfg.max_local_epochs))
+                t_done, d, rb, lost = self._walk_drops(k, float(nxt[0]))
+                if lost:            # every return window drops: sits out
+                    continue
+                heapq.heappush(heap, (t_done, k))
+                client_params[k] = self._tx_global()
+                pickup_round[k] = 0
+                epochs_of[k] = ep
+                idle_of[k] = max(nxt[0] - (recv_end + ep * float(ep_s[k])),
+                                 0.0)
+                pickup_t[k] = float(w[0])
+                meta_of[k] = (d, rb)
+                if self.energy is not None:
+                    deferred_up[k] = float(self._t_up_k[k])
 
         buf, r = [], 0
         t_round_start = t0
         idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
         energy_acc, skip_acc = 0.0, 0
+        fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
         comm_by: Dict[int, float] = {}
         while heap and r < max_rounds:
             t_ret, k = heapq.heappop(heap)
             if t_ret > t_end:
                 break
-            self.key, sub = jax.random.split(self.key)
-            trained = local_sgd(cfg.model, client_params[k], self.ds.x[k],
-                                self.ds.y[k], sub, epochs_of[k],
-                                cfg.batch_size, cfg.lr, cfg.prox_mu, True,
-                                client_params[k])
-            if cfg.quant_bits:      # the returned model crosses the radio
-                trained = quantize_roundtrip(trained, cfg.quant_bits)
-            stale = r - pickup_round[k]
-            wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
-            buf.append((trained, client_params[k], wgt))
             t_up, t_down = float(self._t_up_k[k]), float(self._t_down_k[k])
             train_s = epochs_of[k] * float(ep_s[k])
-            comm_acc += t_up + t_down
-            comm_by[k] = comm_by.get(k, 0.0) + t_up + t_down
-            train_acc += train_s
-            idle_acc += idle_of.get(k, 0.0)
-            n_ev += 1
+            # a radiation reset since pickup wiped the client's local
+            # state: the episode's update (and any in-flight downlink) is
+            # lost. Nothing is billed — the reset, not the radio, lost it
+            # — and the client re-syncs by picking up the current global
+            # at this same contact.
+            wiped = (self.faults is not None and self.faults.cfg.has_resets
+                     and self.faults.reset_in(k, pickup_t.get(k, t0), t_ret))
+            n_drops = 0
+            if not wiped:
+                self.key, sub = jax.random.split(self.key)
+                trained = local_sgd(cfg.model, client_params[k],
+                                    self.ds.x[k], self.ds.y[k], sub,
+                                    epochs_of[k], cfg.batch_size, cfg.lr,
+                                    cfg.prox_mu, True, client_params[k])
+                if cfg.quant_bits:  # the returned model crosses the radio
+                    trained = quantize_roundtrip(trained, cfg.quant_bits)
+                stale = r - pickup_round[k]
+                wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
+                buf.append((trained, client_params[k], wgt))
+                comm_acc += t_up + t_down
+                comm_by[k] = comm_by.get(k, 0.0) + t_up + t_down
+                train_acc += train_s
+                idle_acc += idle_of.get(k, 0.0)
+                n_ev += 1
+                if self.faults is not None:
+                    # the drop walk resolved at scheduling time: retry
+                    # airtime joins the episode's comm accounting
+                    n_drops, rb = meta_of.get(k, (0, 0.0))
+                    drop_acc += n_drops
+                    rebill_acc += rb
+                    comm_acc += n_drops * t_down
+                    comm_by[k] = comm_by.get(k, 0.0) + n_drops * t_down
+            else:
+                fault_acc += 1
+                deferred_up.pop(k, None)
             # client immediately picks up the current global and continues
             recv_end = t_ret + t_up
             requeue, stood_down = True, False
             if self.energy is not None:
                 self.energy.advance_to(t_ret)
                 # the completed episode is billed at its return contact:
-                # training, the downlink that just happened, and any pickup
-                # uplink deferred past a stand-down (whose contact the
-                # clock has now passed)
-                energy_acc += self.energy.bill_activity(
-                    np.array([k]), np.array([train_s]),
-                    np.array([t_down + deferred_up.pop(k, 0.0)]))
+                # training, the downlink(s) that just happened — retries
+                # included — and any pickup uplink deferred past a
+                # stand-down (whose contact the clock has now passed)
+                if not wiped:
+                    energy_acc += self.energy.bill_activity(
+                        np.array([k]), np.array([train_s]),
+                        np.array([t_down * (1 + n_drops)
+                                  + deferred_up.pop(k, 0.0)]))
                 if not self.energy.eligible()[k]:
                     # drained below the floor: stand down until idle+solar
                     # recovers, then rejoin at the next contact after that.
@@ -602,8 +836,18 @@ class FedBuffSat(SpaceifiedFL):
                         requeue = False     # never recovers: drops out
                     else:
                         recv_end = w2[0] + t_up
-            nxt = plan.next_contact(k, recv_end + float(ep_s[k])) \
+            nxt = self._next_available_contact(k, recv_end + float(ep_s[k])) \
                 if requeue else None
+            ev_t, d2, rb2 = None, 0, 0.0
+            if nxt is not None:
+                ev_t = float(nxt[0]) + t_down
+                if self.faults is not None:
+                    t_done2, d2, rb2, lost = self._walk_drops(k,
+                                                              float(nxt[0]))
+                    if lost:        # every remaining return window drops
+                        nxt = None
+                    else:
+                        ev_t = t_done2
             if nxt is not None:
                 # the next pickup really starts an episode: bill its uplink
                 # — now, if it happens at this same contact; via
@@ -619,12 +863,26 @@ class FedBuffSat(SpaceifiedFL):
                             np.array([t_up]))
                 ep = int(np.clip((nxt[0] - recv_end) // ep_s[k], 1,
                                  cfg.max_local_epochs))
-                heapq.heappush(heap, (nxt[0] + t_down, k))
+                heapq.heappush(heap, (ev_t, k))
                 client_params[k] = self._tx_global()
                 pickup_round[k] = r
                 epochs_of[k] = ep
                 idle_of[k] = max(nxt[0] - (recv_end + ep * float(ep_s[k])),
                                  0.0)
+                if self.faults is not None:
+                    pickup_t[k] = recv_end - t_up
+                    meta_of[k] = (d2, rb2)
+            elif self.energy is not None or self.faults is not None:
+                # the client drops out of the pending set for good (no
+                # recovery contact, or no usable window left): purge its
+                # per-client state so nothing dangles — in particular
+                # epochs_of, whose stale entry would skew every later
+                # round's epoch average. No bytes are billed for a pickup
+                # that never happens. (Gated so the fault-free/energy-free
+                # path stays byte-identical to round_engine_ref.)
+                for dct in (client_params, pickup_round, epochs_of,
+                            idle_of, deferred_up, pickup_t, meta_of):
+                    dct.pop(k, None)
 
             if len(buf) >= cfg.buffer_size:
                 stacked_new = jax.tree.map(lambda *xs: jnp.stack(xs),
@@ -642,12 +900,16 @@ class FedBuffSat(SpaceifiedFL):
                     r, t_round_start, t_ret, dur,
                     idle_acc / max(n_ev, 1),
                     comm_acc / max(n_ev, 1), train_acc / max(n_ev, 1),
-                    acc, [], epochs=float(np.mean(list(epochs_of.values()))),
+                    acc, [],
+                    epochs=float(np.mean(list(epochs_of.values())))
+                    if epochs_of else 0.0,
                     energy_wh=energy_acc, skipped_low_power=skip_acc,
-                    comm_s_by_sat=comm_by))
+                    comm_s_by_sat=comm_by, skipped_faulted=fault_acc,
+                    dropped_contacts=drop_acc, retransmit_bytes=rebill_acc))
                 t_round_start = t_ret
                 idle_acc = comm_acc = train_acc = 0.0
                 energy_acc, skip_acc = 0.0, 0
+                fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
                 comm_by = {}
                 n_ev = 0
                 r += 1

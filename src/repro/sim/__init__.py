@@ -1,8 +1,10 @@
 from repro.sim.energy import EnergyConfig, EnergySim, mixed_fleet
+from repro.sim.faults import EnergyDrainAttack, FaultConfig, FaultSim
 from repro.sim.hardware import FLYCUBE, SMALLSAT_SBAND, HardwareProfile, PowerModes
 
 # NOTE: repro.sim.flystack is imported lazily (import the submodule directly)
 # to avoid a circular import with repro.core.spaceify.
 
 __all__ = ["FLYCUBE", "SMALLSAT_SBAND", "HardwareProfile", "PowerModes",
-           "EnergyConfig", "EnergySim", "mixed_fleet"]
+           "EnergyConfig", "EnergySim", "mixed_fleet",
+           "FaultConfig", "FaultSim", "EnergyDrainAttack"]

@@ -127,7 +127,7 @@ class EnergySim:
 
     def __init__(self, times: Optional[np.ndarray], eclipse,
                  profiles: Sequence[HardwareProfile], cfg: EnergyConfig,
-                 extra_load_mw: float = 0.0):
+                 extra_load_mw=0.0, attack=None):
         if isinstance(eclipse, PackedEclipse):
             K = eclipse.n_sats
             t0 = float(eclipse.t0)
@@ -154,7 +154,23 @@ class EnergySim:
         self.idle_mw = np.array([p.power.idle for p in profiles])
         self.train_mw = np.array([p.power.training for p in profiles])
         self.tx_mw = np.array([p.power.radio_tx for p in profiles])
-        self.load_mw = self.idle_mw + float(extra_load_mw)    # continuous
+        self.train_tx_mw = np.array([p.power.training_tx for p in profiles])
+        # extra_load_mw: scalar or (K,) continuous draw above idle
+        self.load_mw = self.idle_mw + _per_sat(extra_load_mw, K)
+        if attack is not None:
+            # IWQoS'23 energy-drain attack (repro.sim.faults.
+            # EnergyDrainAttack): the forced duty cycle is a continuous
+            # added draw. eclipse_only (the attacker-optimal schedule)
+            # is expressible inside the closed-form engine exactly:
+            # adding `atk` to BOTH load and generation leaves the sunlit
+            # net rate (gen - load) unchanged while the eclipse rate
+            # (-load) gains the full drain — no sunlit attack energy,
+            # full eclipse attack energy, no new interval machinery.
+            atk = attack.added_load_mw(self.idle_mw, self.tx_mw,
+                                       self.train_tx_mw)
+            self.load_mw = self.load_mw + atk
+            if attack.eclipse_only:
+                self.gen_mw = self.gen_mw + atk
         self.cap_wh = _per_sat(cfg.battery_capacity_wh, K)
         self.min_soc = float(cfg.min_soc)
         self.soc_wh = _per_sat(cfg.initial_soc, K) * self.cap_wh
@@ -172,9 +188,9 @@ class EnergySim:
     @classmethod
     def for_constellation(cls, c: WalkerStar, horizon_s: float,
                           hw: HardwareProfile, cfg: EnergyConfig,
-                          extra_load_mw: float = 0.0,
-                          fleet: Optional[Sequence[HardwareProfile]] = None
-                          ) -> "EnergySim":
+                          extra_load_mw=0.0,
+                          fleet: Optional[Sequence[HardwareProfile]] = None,
+                          attack=None) -> "EnergySim":
         """``fleet`` is the round engine's per-satellite timing fleet;
         profile precedence is ``cfg.fleet`` (power-side override) >
         ``fleet`` (shared with timing) > ``hw`` replicated."""
@@ -184,14 +200,15 @@ class EnergySim:
                              times, packed=True)
         profiles = cfg.fleet if cfg.fleet is not None else \
             (tuple(fleet) if fleet is not None else (hw,) * c.n_sats)
-        return cls(times, ecl, profiles, cfg, extra_load_mw=extra_load_mw)
+        return cls(times, ecl, profiles, cfg, extra_load_mw=extra_load_mw,
+                   attack=attack)
 
     @classmethod
     def for_plan(cls, plan, hw: HardwareProfile, cfg: EnergyConfig,
-                 fleet: Optional[Sequence[HardwareProfile]] = None
-                 ) -> "EnergySim":
+                 fleet: Optional[Sequence[HardwareProfile]] = None,
+                 attack=None) -> "EnergySim":
         return cls.for_constellation(plan.constellation, plan.horizon_s,
-                                     hw, cfg, fleet=fleet)
+                                     hw, cfg, fleet=fleet, attack=attack)
 
     # -- interval layout -------------------------------------------------
     def _build_interval_arrays(self, K, t0, init_sun, trans, offsets):

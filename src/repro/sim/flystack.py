@@ -46,7 +46,12 @@ class SimConfig:
     to the primary-profile engine.
     ``epochs_mode``: AutoFLSat only — "fixed" uses ``fl.epochs``, "auto"
     derives the budget from the ISL exchange schedule (Algorithm 2).
-    ``seed``: dataset partition seed (``fl.seed`` drives training).
+    ``seed``: dataset partition seed (``fl.seed`` drives training). With
+    ``fl.faults`` set and ``fl.faults.seed`` left at ``None``, this seed
+    is also threaded into the fault stream — one experiment seed then
+    fixes partitioning AND the fault timeline, while the fault draws stay
+    a ``np.random.default_rng`` stream fully independent of ``fl.seed``'s
+    JAX training keys (the RNG convention documented on ``FLConfig``).
     """
     algorithm: str = "fedavg"            # key in ALGORITHMS or "autoflsat"
     n_clusters: int = 2
@@ -105,6 +110,20 @@ class SimResult:
         counts, including ones the cohort would not have selected."""
         return int(sum(r.skipped_low_power for r in self.records))
 
+    def total_skipped_faulted(self) -> int:
+        """Outage-masked candidates plus wiped/lost updates, summed over
+        rounds (0 when faults are off)."""
+        return int(sum(r.skipped_faulted for r in self.records))
+
+    def total_dropped_contacts(self) -> int:
+        """Transmission attempts lost to per-contact drops, summed over
+        rounds (0 when faults are off)."""
+        return int(sum(r.dropped_contacts for r in self.records))
+
+    def total_retransmit_bytes(self) -> float:
+        """Bytes re-billed by drop-retry transmissions over the run."""
+        return float(sum(r.retransmit_bytes for r in self.records))
+
     def summary(self) -> dict:
         return {
             "algorithm": self.config.algorithm,
@@ -119,6 +138,9 @@ class SimResult:
             "total_h": round(self.total_training_time_h(), 3),
             "energy_wh": round(self.total_energy_wh(), 3),
             "skipped_low_power": self.total_skipped_low_power(),
+            "skipped_faulted": self.total_skipped_faulted(),
+            "dropped_contacts": self.total_dropped_contacts(),
+            "retransmit_bytes": round(self.total_retransmit_bytes(), 1),
         }
 
 
@@ -142,12 +164,18 @@ class FLySTacK:
 
     def run(self) -> SimResult:
         cfg = self.cfg
+        fl = cfg.fl
+        if fl.faults is not None and fl.faults.seed is None:
+            # inherit the experiment seed into the fault stream (still a
+            # numpy stream independent of fl.seed's JAX training keys)
+            fl = dataclasses.replace(
+                fl, faults=dataclasses.replace(fl.faults, seed=cfg.seed))
         if cfg.algorithm == "autoflsat":
-            algo = AutoFLSat(self.plan, self.hw, self.dataset, cfg.fl,
+            algo = AutoFLSat(self.plan, self.hw, self.dataset, fl,
                              epochs_mode=cfg.epochs_mode)
         else:
             cls, overrides = ALGORITHMS[cfg.algorithm]
-            fl = dataclasses.replace(cfg.fl, **overrides)
+            fl = dataclasses.replace(fl, **overrides)
             algo = cls(self.plan, self.hw, self.dataset, fl)
         records = algo.run()
         return SimResult(config=cfg, records=records)

@@ -370,3 +370,47 @@ def test_fedbuff_drops_unrecoverable_client():
     recs = algo.run()
     assert len(recs) >= 1
     assert all(r.energy_wh > 0.0 for r in recs)
+
+
+def test_fedbuff_standdown_without_recovery_leaves_no_dangling_pickup():
+    """A client that stands down mid-run and can NEVER recover (net rate
+    zero) must be dropped from the pending set outright: zero bytes/energy
+    billed for the pickup that never happens, and no dangling per-client
+    state. The dangling ``epochs_of`` entry was observable — every later
+    round's epoch average still included the departed client's stale
+    budget. Hand-checkable: zero idle/radio power and zero generation, so
+    the SoC moves only through the one hot training bill.
+
+    sat 0: epoch_time 1000 s, free training => 3-epoch episodes forever.
+    sat 1: epoch_time 3500 s, 10.8 W training => its single 1-epoch
+    episode bills 3500 s * 10.8 W = 10.5 of 12 Wh, landing at 1.5 Wh
+    under the 6 Wh floor with nothing to recharge it."""
+    plan = _dense_plan()                    # windows every 4000 s
+    ds = make_federated_dataset("femnist", 2, 16)
+
+    def hw(ep_s, train_mw):
+        return HardwareProfile(
+            name=f"nd{ep_s:g}", epoch_time_s=ep_s,
+            downlink_rate_bps=8e12, uplink_rate_bps=8e12, isl_rate_bps=8e12,
+            power=PowerModes(idle=0.0, radio_tx=0.0, training=train_mw,
+                             training_tx=0.0),
+            power_generation_mw=0.0)
+
+    e = EnergyConfig(battery_capacity_wh=12.0, initial_soc=1.0, min_soc=0.5)
+    algo = FedBuffSat(plan, (hw(1000.0, 0.0), hw(3500.0, 10_800.0)), ds,
+                      _cfg(max_rounds=2, buffer_size=2, energy=e))
+    recs = algo.run()
+    assert len(recs) == 2
+    # round 0: sat 1 returns its episode, is billed 10.5 Wh, stands down
+    # with no recovery in sight and drops out
+    assert recs[0].skipped_low_power == 1
+    assert recs[0].energy_wh == pytest.approx(10.5, abs=1e-9)
+    # dropped with zero billed bytes: nothing more is ever billed to it
+    assert recs[1].energy_wh == 0.0
+    assert recs[1].skipped_low_power == 0
+    assert algo.energy.soc_wh[1] == pytest.approx(1.5, abs=1e-9)
+    # no dangling pickup: later epoch averages cover the live client only
+    # (sat 0's 3-epoch budget; the stale 1-epoch entry would drag the
+    # mean to 2.0)
+    assert recs[0].epochs == 3.0
+    assert recs[1].epochs == 3.0

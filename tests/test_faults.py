@@ -1,0 +1,406 @@
+"""Fault subsystem: seeded outage/reset/drop draws (CSR layout, batched
+queries, counter-based determinism), fault gating of every round engine
+(zero-rate == off bitwise, no retracing), retransmission/wipe accounting,
+the AutoFLSat ISL hop-failure stall, the IWQoS'23 energy-drain attack, and
+the FLySTacK fault-seed threading convention."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autoflsat import AutoFLSat
+from repro.core.client import clear_train_caches, train_cache_sizes
+from repro.core.contact_plan import ContactPlan, build_contact_plan
+from repro.core.spaceify import FedAvgSat, FedBuffSat, FedProxSat, FLConfig
+from repro.data.synthetic import make_federated_dataset
+from repro.orbit.constellation import WalkerStar
+from repro.sim.energy import EnergyConfig, EnergySim
+from repro.sim.faults import EnergyDrainAttack, FaultConfig, FaultSim
+from repro.sim.hardware import FLYCUBE, HardwareProfile
+
+HORIZON = 0.8 * 86_400.0
+
+
+def _bitwise_equal(a, b):
+    return all((np.asarray(x) == np.asarray(y)).all()
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _cfg(**kw):
+    base = dict(model="mlp", clients_per_round=2, epochs=1, batch_size=8,
+                max_rounds=2, max_local_epochs=4)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _dense_plan(K=2, horizon=40_000.0, every=4000.0, dur=300.0):
+    c = WalkerStar(1, K)
+    wins = [[(float(s), float(s + dur), 0)
+             for s in np.arange(0.0, horizon - dur, every)]
+            for _ in range(K)]
+    return ContactPlan(constellation=c, horizon_s=horizon, sat_windows=wins,
+                       cluster_of=np.zeros(K, np.int32), pair_windows={})
+
+
+_FAST_HW = HardwareProfile(name="fast", epoch_time_s=50.0,
+                           downlink_rate_bps=8e9, uplink_rate_bps=8e9,
+                           isl_rate_bps=8e9)
+
+
+# ---------------------------------------------------------------------------
+# FaultSim: seeded draws, CSR layout, batched queries
+# ---------------------------------------------------------------------------
+
+
+def test_outage_timeline_seeded_and_plausible():
+    cfg = FaultConfig(mean_up_s=7200.0, mean_down_s=1800.0, seed=11)
+    a = FaultSim(cfg, 8, HORIZON)
+    b = FaultSim(cfg, 8, HORIZON)
+    assert (a._out_start == b._out_start).all()       # same seed, same draw
+    assert (a._out_off == b._out_off).all()
+    c = FaultSim(FaultConfig(mean_up_s=7200.0, mean_down_s=1800.0, seed=12),
+                 8, HORIZON)
+    assert len(a._out_start) != len(c._out_start) or \
+        not (a._out_start == c._out_start).all()
+    # expected down fraction 1800/9000 = 0.2; loose bound over 8 sats/19 h
+    frac = a.outage_fraction()
+    assert 0.05 < float(frac.mean()) < 0.4
+    # intervals are per-satellite sorted and non-overlapping
+    for k in range(8):
+        s = a._out_start[a._out_off[k]:a._out_off[k + 1]]
+        e = a._out_end[a._out_off[k]:a._out_off[k + 1]]
+        assert (e > s).all()
+        assert (s[1:] > e[:-1]).all()
+
+
+def test_available_and_next_up_match_bruteforce():
+    cfg = FaultConfig(mean_up_s=3000.0, mean_down_s=2000.0, seed=3)
+    fs = FaultSim(cfg, 5, HORIZON)
+    rng = np.random.default_rng(0)
+    for t in rng.uniform(0.0, HORIZON, 50):
+        got = fs.available(t)
+        up = fs.next_up(np.arange(5), np.full(5, t))
+        for k in range(5):
+            s = fs._out_start[fs._out_off[k]:fs._out_off[k + 1]]
+            e = fs._out_end[fs._out_off[k]:fs._out_off[k + 1]]
+            inside = (s <= t) & (t < e)
+            assert got[k] == (not inside.any())
+            want = float(e[inside][0]) if inside.any() else t
+            assert up[k] == pytest.approx(want)
+
+
+def test_no_outages_when_mean_up_infinite():
+    fs = FaultSim(FaultConfig(), 4, HORIZON)       # default mean_up = inf
+    assert fs.available(0.0).all()
+    assert (fs.outage_fraction() == 0.0).all()
+    assert (fs.next_up(np.arange(4), np.full(4, 123.0)) == 123.0).all()
+
+
+def test_contact_drop_is_counter_based_and_order_independent():
+    cfg = FaultConfig(drop_prob=0.4, seed=9)
+    fs = FaultSim(cfg, 4, HORIZON)
+    times = np.linspace(10.0, HORIZON, 200)
+    fwd = [fs.contact_dropped(1, t) for t in times]
+    rev = [fs.contact_dropped(1, t) for t in reversed(times)]
+    assert fwd == rev[::-1]                    # pure function of (seed, k, t)
+    rate = np.mean(fwd)
+    assert 0.2 < rate < 0.6                    # ~Bernoulli(0.4)
+    # distinct satellites / pair streams draw independently
+    other = [fs.contact_dropped(2, t) for t in times]
+    assert fwd != other
+    assert fs.pair_dropped(0, 1, 50.0) == fs.pair_dropped(0, 1, 50.0)
+    fs0 = FaultSim(FaultConfig(drop_prob=0.0, seed=9), 4, HORIZON)
+    assert not any(fs0.contact_dropped(1, t) for t in times[:20])
+
+
+def test_resets_between_matches_bruteforce():
+    cfg = FaultConfig(radiation_rate_per_day=6.0, seed=5)
+    fs = FaultSim(cfg, 4, HORIZON)
+    rng = np.random.default_rng(1)
+    ks = rng.integers(0, 4, 40)
+    a = rng.uniform(0.0, HORIZON, 40)
+    b = a + rng.uniform(0.0, 20_000.0, 40)
+    got = fs.resets_between(ks, a, b)
+    for i, k in enumerate(ks):
+        tt = fs._rst_t[fs._rst_off[k]:fs._rst_off[k + 1]]
+        assert got[i] == int(np.sum((tt > a[i]) & (tt <= b[i])))
+        assert fs.reset_in(int(k), a[i], b[i]) == (got[i] > 0)
+
+
+# ---------------------------------------------------------------------------
+# engine gating: zero-rate == off (bitwise), masks never retrace
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_contact_plan(2, 3, 2, horizon_s=HORIZON, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_dataset("femnist", 6, 32)
+
+
+@pytest.mark.parametrize("cls", [FedAvgSat, FedProxSat, FedBuffSat,
+                                 AutoFLSat])
+def test_zero_rate_faults_bitwise_identical(plan, ds, cls):
+    """A FaultConfig that never fires (no outages, no drops, no resets)
+    must reproduce faults=None exactly: same decisions, same timings,
+    bitwise-identical params."""
+    cfg = dict(model="mlp", clients_per_round=4, epochs=2, batch_size=16,
+               max_rounds=3, max_local_epochs=6, buffer_size=3)
+    off = cls(plan, _FAST_HW, ds, FLConfig(**cfg))
+    recs_off = off.run()
+    on = cls(plan, _FAST_HW, ds, FLConfig(faults=FaultConfig(), **cfg))
+    recs_on = on.run()
+    assert [(r.t_start, r.t_end, r.accuracy, tuple(r.participants))
+            for r in recs_off] == \
+        [(r.t_start, r.t_end, r.accuracy, tuple(r.participants))
+         for r in recs_on]
+    assert _bitwise_equal(off.global_params, on.global_params)
+    assert all(r.skipped_faulted == 0 and r.dropped_contacts == 0
+               and r.retransmit_bytes == 0.0 for r in recs_on)
+
+
+def test_outage_gating_masks_cohort_without_retracing(plan, ds):
+    """Heavy outages must shrink cohorts (skipped_faulted > 0 across the
+    run) while the padded dispatch still compiles exactly once."""
+    flt = FaultConfig(mean_up_s=2000.0, mean_down_s=4000.0, seed=2)
+    clear_train_caches()
+    algo = FedAvgSat(plan, _FAST_HW, ds,
+                     _cfg(clients_per_round=4, max_rounds=6, faults=flt))
+    recs = algo.run()
+    assert len(recs) >= 2
+    assert sum(r.skipped_faulted for r in recs) > 0
+    assert train_cache_sizes()["local_sgd_clients"] == 1
+
+
+def test_all_drops_leave_global_untouched(plan, ds):
+    """drop_prob=1: every downlink attempt is lost, so no update is ever
+    delivered — the global model must stay bitwise at w0 while the round
+    still completes (the server times out on its cohort) and the
+    drop/retransmit accounting fills in. The lost walk bills the real
+    attempts: rebill covers every attempt beyond each client's first."""
+    flt = FaultConfig(drop_prob=1.0, seed=7)
+    algo = FedAvgSat(plan, _FAST_HW, ds, _cfg(max_rounds=1, faults=flt))
+    w0 = algo.global_params
+    recs = algo.run()
+    assert len(recs) == 1
+    assert _bitwise_equal(algo.global_params, w0)
+    r = recs[0]
+    assert r.dropped_contacts > 0
+    assert r.skipped_faulted >= len(r.participants)
+    n_lost = len(r.participants)
+    assert r.retransmit_bytes == pytest.approx(
+        (r.dropped_contacts - n_lost) * algo.tx_bytes)
+
+
+def test_moderate_drops_rebill_bytes(plan, ds):
+    flt = FaultConfig(drop_prob=0.5, seed=1)
+    algo = FedAvgSat(plan, _FAST_HW, ds,
+                     _cfg(clients_per_round=4, max_rounds=6, faults=flt))
+    recs = algo.run()
+    drops = sum(r.dropped_contacts for r in recs)
+    rebill = sum(r.retransmit_bytes for r in recs)
+    assert drops > 0
+    # every re-billed transmission is a whole model
+    assert rebill == pytest.approx(
+        (rebill // algo.tx_bytes) * algo.tx_bytes)
+    assert rebill > 0.0
+
+
+def test_radiation_wipes_updates(plan, ds):
+    """A reset rate so high every episode sees one (mean gap ~1.7 s vs
+    ~50 s episodes): all updates are wiped, the global stays at w0, and
+    the wipes are counted."""
+    flt = FaultConfig(radiation_rate_per_day=50_000.0, seed=4)
+    algo = FedAvgSat(plan, _FAST_HW, ds, _cfg(max_rounds=2, faults=flt))
+    w0 = algo.global_params
+    recs = algo.run()
+    assert len(recs) == 2
+    assert _bitwise_equal(algo.global_params, w0)
+    assert all(r.skipped_faulted >= len(r.participants) for r in recs)
+    assert all(r.dropped_contacts == 0 for r in recs)   # wipes, not drops
+
+
+def test_fedbuff_survives_outages_and_drops(plan, ds):
+    flt = FaultConfig(mean_up_s=20_000.0, mean_down_s=3000.0,
+                      drop_prob=0.3, radiation_rate_per_day=3.0, seed=6)
+    algo = FedBuffSat(plan, _FAST_HW, ds,
+                      _cfg(max_rounds=3, buffer_size=3, faults=flt))
+    recs = algo.run()
+    assert len(recs) >= 1
+    assert sum(r.dropped_contacts for r in recs) > 0
+    # event times are strictly inside the horizon and monotone
+    assert all(recs[i].t_end <= recs[i + 1].t_end
+               for i in range(len(recs) - 1))
+
+
+def test_autoflsat_hop_failures_stall_the_chain(plan, ds):
+    cfg = dict(model="mlp", clients_per_round=4, epochs=1, batch_size=16,
+               max_rounds=1, max_local_epochs=4)
+    clean = AutoFLSat(plan, _FAST_HW, ds, FLConfig(**cfg))
+    sched0 = clean.inter_sl_scheduler(0.0)
+    faulty = AutoFLSat(plan, _FAST_HW, ds,
+                       FLConfig(faults=FaultConfig(drop_prob=0.5, seed=8),
+                                **cfg))
+    sched1 = faulty.inter_sl_scheduler(0.0)
+    assert sched1 is not None
+    assert sched1.dropped_contacts > 0
+    # a failed hop stalls the sync to a later completion, never earlier
+    assert sched1.t_complete > sched0.t_complete
+    assert sched1.retransmit_bytes == pytest.approx(
+        sched1.dropped_contacts * 2.0 * faulty.tx_bytes)
+    recs = faulty.run()
+    assert len(recs) >= 1
+    assert recs[0].dropped_contacts == recs[0].retransmit_bytes \
+        / (2.0 * faulty.tx_bytes)
+
+
+# ---------------------------------------------------------------------------
+# IWQoS'23 energy-drain attack
+# ---------------------------------------------------------------------------
+
+
+def _eclipse_sim(attack, cap_wh=2.0, K=2, horizon=4 * 5668.0):
+    """Alternating 2/3 sun + 1/3 eclipse orbit for K satellites."""
+    period = 5668.0
+    times = np.arange(0.0, horizon, 60.0)
+    phase = (times % period) / period
+    ecl = np.broadcast_to((phase > 2.0 / 3.0)[:, None],
+                          (len(times), K)).copy()
+    cfg = EnergyConfig(battery_capacity_wh=cap_wh, initial_soc=1.0,
+                       min_soc=0.4)
+    return EnergySim(times, ecl, (FLYCUBE,) * K, cfg, attack=attack)
+
+
+def test_attack_rates_follow_the_eclipse_only_identity():
+    """eclipse_only drains only in the dark: the sunlit net rate is
+    bitwise-unchanged while the eclipse rate gains the full forced draw
+    (duty * (mode - idle)) — that concentration is what makes the
+    schedule attacker-optimal against a solar-charged fleet."""
+    base = _eclipse_sim(None)
+    atk = EnergyDrainAttack(duty=0.5, mode="radio_tx", eclipse_only=True)
+    sim = _eclipse_sim(atk)
+    assert (sim.gen_mw - sim.load_mw == base.gen_mw - base.load_mw).all()
+    forced = 0.5 * (FLYCUBE.power.radio_tx - FLYCUBE.power.idle)
+    assert sim.load_mw[0] - base.load_mw[0] == pytest.approx(forced)
+    always = _eclipse_sim(EnergyDrainAttack(duty=0.5, mode="radio_tx",
+                                            eclipse_only=False))
+    assert (always.gen_mw == base.gen_mw).all()   # sunlit surplus eroded too
+
+
+def test_attack_pins_victims_below_the_floor():
+    t_probe = 3.99 * 5668.0            # end of the fourth orbit's eclipse
+    base = _eclipse_sim(None)
+    base.advance_to(t_probe)
+    atkd = _eclipse_sim(EnergyDrainAttack(duty=0.9, mode="training_tx"))
+    atkd.advance_to(t_probe)
+    assert base.eligible().all()           # healthy fleet rides out eclipse
+    assert atkd.soc_wh[0] < base.soc_wh[0]
+    assert not atkd.eligible().any()       # attack pins below the SoC floor
+
+
+def test_attack_targets_only_selected_victims():
+    t_probe = 3.99 * 5668.0
+    atk = EnergyDrainAttack(duty=0.9, mode="training_tx", targets=(1,))
+    sim = _eclipse_sim(atk)
+    base = _eclipse_sim(None)
+    sim.advance_to(t_probe)
+    base.advance_to(t_probe)
+    assert sim.soc_wh[0] == base.soc_wh[0]      # untargeted sat untouched
+    assert sim.soc_wh[1] < base.soc_wh[1]
+
+
+def test_attack_requires_energy_model(plan, ds):
+    flt = FaultConfig(attack=EnergyDrainAttack())
+    with pytest.raises(ValueError):
+        FedAvgSat(plan, _FAST_HW, ds, _cfg(faults=flt))
+    # with a battery model it wires through
+    algo = FedAvgSat(plan, _FAST_HW, ds,
+                     _cfg(faults=flt, energy=EnergyConfig()))
+    assert algo.energy is not None and algo.faults is not None
+
+
+# ---------------------------------------------------------------------------
+# property: mask composition order is immaterial and never retraces
+# ---------------------------------------------------------------------------
+
+
+class _ReorderedMaskFedAvg(FedAvgSat):
+    """FedAvgSat with the eligibility AND evaluated in the opposite
+    order: (fault & energy) & orbit instead of (orbit & energy) & fault."""
+
+    def _projected_returns(self, t, epochs):
+        proj = dict(super()._projected_returns(t, epochs))
+        proj["valid"] = (proj["fault_ok"] & proj["energy_ok"]) \
+            & proj["orbit_valid"]
+        return proj
+
+
+def test_mask_composition_order_property(plan, ds):
+    """Satellite task (PR 6): for any seed/outage/battery draw, ANDing
+    the energy and fault masks in any order yields the same padded
+    cohort, the same global params (bitwise), and never adds a trace."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    given, settings = hypothesis.given, hypothesis.settings
+
+    @settings(max_examples=8, deadline=None)
+    @given(fseed=st.integers(0, 2**16),
+           mean_up=st.sampled_from([3000.0, 9000.0, float("inf")]),
+           drop=st.sampled_from([0.0, 0.4]),
+           soc0=st.floats(0.25, 1.0))
+    def prop(fseed, mean_up, drop, soc0):
+        flt = FaultConfig(mean_up_s=mean_up, mean_down_s=3000.0,
+                          drop_prob=drop, radiation_rate_per_day=1.0,
+                          seed=fseed)
+        e = EnergyConfig(battery_capacity_wh=3.0, initial_soc=soc0,
+                         min_soc=0.4)
+        cfg = _cfg(clients_per_round=4, max_rounds=2, faults=flt, energy=e)
+        clear_train_caches()
+        a = FedAvgSat(plan, _FAST_HW, ds, cfg)
+        ra = a.run()
+        b = _ReorderedMaskFedAvg(plan, _FAST_HW, ds, cfg)
+        rb = b.run()
+        assert [(r.t_end, tuple(r.participants), r.skipped_faulted)
+                for r in ra] == \
+            [(r.t_end, tuple(r.participants), r.skipped_faulted)
+             for r in rb]
+        assert _bitwise_equal(a.global_params, b.global_params)
+        # one padded dispatch shape, regardless of how many slots the
+        # composed mask zeroed: the trainer never retraced (zero traces
+        # when the draw left no eligible cohort at all)
+        assert train_cache_sizes()["local_sgd_clients"] == (1 if ra else 0)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# FLySTacK fault-seed threading (RNG convention)
+# ---------------------------------------------------------------------------
+
+
+def test_flystack_threads_experiment_seed_into_faults():
+    from repro.sim.flystack import FLySTacK, SimConfig
+    fl = _cfg(faults=FaultConfig(mean_up_s=4000.0, mean_down_s=4000.0,
+                                 drop_prob=0.3))
+    base = SimConfig(algorithm="fedavg", n_clusters=1, sats_per_cluster=2,
+                     n_ground_stations=2, dataset="femnist", model="mlp",
+                     horizon_days=0.5, n_per_client=16, fl=fl, seed=7)
+    sim = FLySTacK(base)
+    inherited = sim.run()
+    explicit_fl = _cfg(faults=FaultConfig(mean_up_s=4000.0,
+                                          mean_down_s=4000.0,
+                                          drop_prob=0.3, seed=7))
+    import dataclasses as dc
+    sim2 = FLySTacK(dc.replace(base, fl=explicit_fl), plan=sim.plan)
+    explicit = sim2.run()
+    assert [(r.t_end, r.accuracy, r.dropped_contacts, r.skipped_faulted)
+            for r in inherited.records] == \
+        [(r.t_end, r.accuracy, r.dropped_contacts, r.skipped_faulted)
+         for r in explicit.records]
+    # the threaded replace must not mutate the caller's config
+    assert base.fl.faults.seed is None

@@ -1,3 +1,4 @@
-from repro.checkpoint.checkpoint import restore_pytree, save_pytree
+from repro.checkpoint.checkpoint import (ChecksumError, restore_pytree,
+                                         save_pytree)
 
-__all__ = ["save_pytree", "restore_pytree"]
+__all__ = ["ChecksumError", "save_pytree", "restore_pytree"]

@@ -112,8 +112,10 @@ class AutoFLSat(SpaceifiedFL):
         may drop independently (``faults.pair_dropped``, keyed by the
         attempt time, so every retry is a fresh seeded draw). A dropped
         hop spends its airtime, re-bills the pair's bytes both ways, and
-        stalls the cluster sync until the next pair window accumulates
-        the airtime again. Returns (t_complete, passes, dropped_hops,
+        stalls the cluster sync until the next pair *window* — the drop
+        is the fate of the whole exchange attempt, so the retry
+        re-acquires at the next pass rather than microseconds later in
+        the same one. Returns (t_complete, passes, dropped_hops,
         retransmit_bytes) or None when a hop runs out of windows."""
         C = self.n_clusters
         t_cur = t
@@ -132,9 +134,14 @@ class AutoFLSat(SpaceifiedFL):
                         break
                     drops += 1
                     rebill += 2.0 * self.tx_bytes   # both directions lost
-                    t_cur = done    # airtime was spent: stall to the next
-                    #                 window (done > attempt start, so the
-                    #                 retry walk always terminates)
+                    # airtime was spent through ``done``; skip the rest of
+                    # the pass the failed attempt ended in and retry at
+                    # the next pair window (strictly later, so the walk
+                    # always terminates and every retry keys a new draw)
+                    w = self.plan.next_pair_window(ci, cj, done)
+                    if w is None:
+                        return None
+                    t_cur = float(w[1]) if w[0] <= done else float(w[0])
         return t_cur, passes, drops, rebill
 
     # ------------------------------------------------------------------
@@ -199,11 +206,25 @@ class AutoFLSat(SpaceifiedFL):
         if cfg.quant_bits:                   # member -> cluster-head return
             trained = quantize_roundtrip_stacked(trained, cfg.quant_bits)
 
+        # silent payload faults: member k's trained model crosses the
+        # intra-cluster ISL to its cluster head at done_k[k]; the delivery
+        # may be SEU-corrupted or poisoned. Members already masked out
+        # (ok False) deliver nothing, so they draw nothing.
+        n_corr, n_clip = 0, 0
+        if self.faults is not None and self.faults.cfg.has_payload_faults:
+            for kk in range(K):
+                if ok is not None and not ok[kk]:
+                    continue
+                ref_c = jax.tree.map(lambda b: b[kk // spc], bcast)
+                trained, bad = self._corrupt_row(
+                    trained, kk, kk, float(done_k[kk]), ref_c)
+                n_corr += int(bad)
+
         # tier 2: all-to-all exchange -> constellation-wide model (the
         # exchanged cluster models cross ISLs quantized when quant_bits>0)
         if ok is None:
             stacked_clusters = segment_mean(trained, C)
-            self.global_params = self._aggregate(
+            self.global_params, n_clip = self._aggregate(
                 stacked_clusters, np.full(C, float(spc)))
             self.cluster_params = jax.tree.map(
                 lambda g: jnp.broadcast_to(g, (C,) + g.shape),
@@ -215,7 +236,8 @@ class AutoFLSat(SpaceifiedFL):
                 stacked_clusters = segment_weighted_mean(
                     trained, jnp.asarray(w, jnp.float32), C)
                 # clusters with no eligible members carry zero tier-2 weight
-                self.global_params = self._aggregate(stacked_clusters, seg_w)
+                self.global_params, n_clip = self._aggregate(
+                    stacked_clusters, seg_w)
                 self.cluster_params = jax.tree.map(
                     lambda g: jnp.broadcast_to(g, (C,) + g.shape),
                     self.global_params)
@@ -269,4 +291,6 @@ class AutoFLSat(SpaceifiedFL):
                                           for k in participants},
                            skipped_faulted=n_flt,
                            dropped_contacts=sched.dropped_contacts,
-                           retransmit_bytes=sched.retransmit_bytes)
+                           retransmit_bytes=sched.retransmit_bytes,
+                           corrupted_updates=n_corr,
+                           clipped_updates=n_clip)

@@ -88,11 +88,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aggregation import (apply_buffered_deltas,
+                                    make_robust_aggregator,
                                     quantized_weighted_average,
+                                    robust_apply_buffered_deltas,
                                     weighted_average)
 from repro.core.client import local_sgd, local_sgd_clients
 from repro.core.contact_plan import ContactPlan
-from repro.core.quantize import quantize_roundtrip, transmit_bytes
+from repro.core.quantize import (quantize_roundtrip,
+                                 quantize_roundtrip_stacked, transmit_bytes)
 from repro.models.small import MODELS, accuracy
 from repro.sim.energy import EnergyConfig, EnergySim
 from repro.sim.faults import FaultConfig, FaultSim
@@ -127,6 +130,12 @@ class RoundRecord:
                                    # updates this round
     dropped_contacts: int = 0      # transmission attempts lost to drops
     retransmit_bytes: float = 0.0  # bytes re-billed by retried transmissions
+    # silent-corruption accounting: delivered updates whose payload was
+    # SEU-corrupted or adversarially poisoned in flight (they still bill
+    # their bytes — the radio delivered them — but carry bad weights), and
+    # rows the robust aggregator attenuated/rejected this round
+    corrupted_updates: int = 0
+    clipped_updates: int = 0
 
 
 @dataclasses.dataclass
@@ -191,13 +200,28 @@ class FLConfig:
         disables every fault path and is bitwise-identical to the
         fault-free engine.
 
+    Robust aggregation (this PR)
+        ``aggregator``: ``None`` (default) keeps the exact legacy
+        weighted-mean server — bitwise-identical to the pre-robust
+        engine. A registry name ("norm_clip" | "trimmed_mean" |
+        "median" | "krum") or a ``RobustAggregator`` instance swaps in
+        a Byzantine-robust estimator over the stacked cohort (see
+        ``repro.core.aggregation``): the defense against silently
+        corrupted (``faults.corrupt_prob``) or poisoned
+        (``faults.poison``) updates. With ``quant_bits > 0`` the cohort
+        is first round-tripped through the QuAFL wire format, so the
+        estimator sees exactly what the radio delivered; rank-based
+        estimators route through the ``trimmed_agg`` Pallas kernel via
+        the same ``quant_kernel`` mode knob.
+
     RNG convention: ``seed`` drives the JAX PRNG key stream for model
     init + minibatch order; ``faults.seed`` drives a *separate*
     ``np.random.default_rng`` stream for every fault draw (outages,
-    resets, per-contact drops). The two streams never mix — enabling or
-    reseeding faults never perturbs training randomness, and fault draws
-    are counter-based per satellite/contact, so they are reproducible
-    across engines and independent of query order.
+    resets, per-contact drops, payload corruption). The two streams
+    never mix — enabling or reseeding faults never perturbs training
+    randomness, and fault draws are counter-based per satellite/contact,
+    so they are reproducible across engines and independent of query
+    order.
     """
     model: str = "cnn"
     clients_per_round: int = 10          # C (static cohort width)
@@ -219,6 +243,8 @@ class FLConfig:
     eval_every: int = 1
     energy: Optional[EnergyConfig] = None   # battery SoC gating (off = None)
     faults: Optional[FaultConfig] = None    # fault injection (off = None)
+    aggregator: Optional[object] = None     # None => legacy weighted mean;
+                                            # name | RobustAggregator instance
 
 
 def _model_tx_bytes(params, cfg: FLConfig) -> float:
@@ -264,6 +290,9 @@ class SpaceifiedFL:
                     "energy-drain attack targets batteries")
             attack = cfg.faults.attack
             self.faults = FaultSim.for_plan(plan, cfg.faults)
+        # Byzantine-robust server (FLConfig.aggregator); None => the exact
+        # legacy weighted-mean path (guaranteed bitwise-identical)
+        self.aggregator = make_robust_aggregator(cfg.aggregator)
         if cfg.energy is not None:
             # shared-fleet invariant: unless EnergyConfig.fleet overrides,
             # the battery bills the same per-satellite hardware that the
@@ -365,14 +394,27 @@ class SpaceifiedFL:
         return self._tx_cache
 
     def _aggregate(self, stacked, weights):
-        """Server-side aggregation of a returned (stacked) cohort. With
-        quantization on, the cohort is dequantized + accumulated through
-        the quant_agg kernel path."""
+        """Server-side aggregation of a returned (stacked) cohort.
+        Returns ``(params, n_attenuated)`` — the robust estimator's
+        attenuated/rejected row count, 0 on the plain mean paths.
+
+        With quantization on, the plain path dequantizes + accumulates
+        through the quant_agg kernel; the robust path first round-trips
+        the cohort through the QuAFL wire format so the estimator sees
+        exactly what the radio delivered, then routes rank-based
+        defenses through the trimmed_agg kernel (same mode knob)."""
+        if self.aggregator is not None:
+            if self.cfg.quant_bits:
+                stacked = quantize_roundtrip_stacked(stacked,
+                                                     self.cfg.quant_bits)
+            return self.aggregator.aggregate(stacked, weights,
+                                             self._tx_global(),
+                                             mode=self.cfg.quant_kernel)
         if self.cfg.quant_bits:
             return quantized_weighted_average(
                 stacked, weights, self.cfg.quant_bits,
-                mode=self.cfg.quant_kernel)
-        return weighted_average(stacked, weights)
+                mode=self.cfg.quant_kernel), 0
+        return weighted_average(stacked, weights), 0
 
     # -- fixed-shape training dispatch -----------------------------------
     def _train_cohort(self, sel: List[int], epochs, prox: bool = False):
@@ -430,23 +472,29 @@ class SpaceifiedFL:
                 return (up, w[1], w[2])
             tq = up                 # strictly past w[0]: walk terminates
 
-    def _walk_drops(self, k: int, t_first: float):
-        """Drop-retry walk of ``k``'s downlink from the usable window at
-        ``t_first``: each dropped attempt spends its airtime and retries
-        at the next usable window. Returns ``(t_done, drops, rebill_bytes,
-        lost)`` — ``drops`` counts lost attempts, ``rebill_bytes`` bills
-        every attempt beyond the first, ``lost=True`` when the horizon
-        runs out of windows before a delivery."""
+    def _walk_drops(self, k: int, w_first):
+        """Drop-retry walk of ``k``'s downlink from the usable window
+        ``w_first`` (a ``(t_avail, end, gs)`` tuple): the drop draw is
+        the seeded fate of the whole pass, so a dropped attempt spends
+        its airtime and re-acquires at the *next* usable pass — never
+        microseconds later inside the same one (per-airtime retries would
+        turn one dropped pass into millions of fresh draws on a fast
+        link, and the walk keys a new RNG per draw). Returns ``(t_done,
+        drops, rebill_bytes, lost)`` — ``drops`` counts lost passes,
+        ``rebill_bytes`` bills every attempt beyond the first,
+        ``lost=True`` when the horizon runs out of windows before a
+        delivery."""
         t_down = float(self._t_down_k[k])
-        t_try, drops = float(t_first), 0
-        while self.faults.contact_dropped(k, t_try):
+        w, drops = w_first, 0
+        while self.faults.contact_dropped(k, float(w[0])):
             drops += 1
-            w = self._next_available_contact(k, t_try + t_down)
-            if w is None:
-                return (t_try + t_down, drops,
+            nxt = self._next_available_contact(
+                k, max(float(w[0]) + t_down, float(w[1])))
+            if nxt is None:
+                return (float(w[0]) + t_down, drops,
                         max(drops - 1, 0) * self.tx_bytes, True)
-            t_try = float(w[0])
-        return t_try + t_down, drops, drops * self.tx_bytes, False
+            w = nxt
+        return float(w[0]) + t_down, drops, drops * self.tx_bytes, False
 
     def _faulted_return_legs(self, ks, recv_end, train_end, ends, comms):
         """Re-resolve the selected cohort's return downlinks under faults
@@ -478,7 +526,7 @@ class SpaceifiedFL:
                 delivered[i], n_faulted = 0.0, n_faulted + 1
                 ends[i], comms[i] = float(train_end[i]), t_up
                 continue
-            t_done, d, rb, lost = self._walk_drops(k, float(w0[0]))
+            t_done, d, rb, lost = self._walk_drops(k, w0)
             if lost:
                 delivered[i], n_faulted = 0.0, n_faulted + 1
                 ends[i], comms[i] = t_done, t_up + d * float(
@@ -503,6 +551,91 @@ class SpaceifiedFL:
             return 0
         return int(np.sum(proj["orbit_valid"] & proj["energy_ok"]
                           & ~proj["fault_ok"]))
+
+    # -- silent payload faults (SEU corruption + poisoning) --------------
+    def _corrupt_row(self, params, i: int, k: int, t_deliver: float,
+                     reference):
+        """Apply ``k``'s payload fault (if any) to row ``i`` of a stacked
+        pytree delivered at ``t_deliver``. Returns (params, was_bad).
+
+        A compromised satellite (``faults.poison``) submits the
+        model-replacement payload ``(1+s)*ref - s*trained`` — its honest
+        delta reversed and amplified by ``s`` — crafted from the
+        ``reference`` it trained against, so poisoning takes precedence
+        over the SEU draw. Otherwise a counter-based SEU draw
+        (``corruption_at``) may flip the row's sign, blow up its scale,
+        or add large-magnitude seeded noise. Only this row of the tree is
+        touched: corruption must never perturb the other cohort members.
+        """
+        fc = self.faults.cfg
+        if fc.poison is not None and fc.poison.compromised(k):
+            s = fc.poison.scale
+            params = jax.tree.map(
+                lambda p, g: p.at[i].set(
+                    ((1.0 + s) * g.astype(jnp.float32)
+                     - s * p[i].astype(jnp.float32)).astype(p.dtype)),
+                params, reference)
+            return params, True
+        draw = self.faults.corruption_at(k, t_deliver)
+        if draw is None:
+            return params, False
+        mode, factor, noise_seed = draw
+        if mode == "sign_flip":
+            params = jax.tree.map(lambda p: p.at[i].multiply(-1.0), params)
+        elif mode == "scale":
+            params = jax.tree.map(lambda p: p.at[i].multiply(factor), params)
+        else:                           # large-magnitude seeded noise
+            rng = np.random.default_rng(noise_seed)
+            params = jax.tree.map(
+                lambda p: p.at[i].add(jnp.asarray(
+                    rng.standard_normal(p.shape[1:]) * factor, p.dtype)),
+                params)
+        return params, True
+
+    def _payload_fault_model(self, k: int, params, t_deliver: float,
+                             reference):
+        """Unstacked sibling of ``_corrupt_row`` for the async engine:
+        apply ``k``'s payload fault (if any) to a single delivered model.
+        Returns (params, was_bad)."""
+        fc = self.faults.cfg
+        if fc.poison is not None and fc.poison.compromised(k):
+            s = fc.poison.scale
+            out = jax.tree.map(
+                lambda p, g: ((1.0 + s) * g.astype(jnp.float32)
+                              - s * p.astype(jnp.float32)).astype(p.dtype),
+                params, reference)
+            return out, True
+        draw = self.faults.corruption_at(k, t_deliver)
+        if draw is None:
+            return params, False
+        mode, factor, noise_seed = draw
+        if mode == "sign_flip":
+            out = jax.tree.map(lambda p: -p, params)
+        elif mode == "scale":
+            out = jax.tree.map(lambda p: p * factor, params)
+        else:
+            rng = np.random.default_rng(noise_seed)
+            out = jax.tree.map(
+                lambda p: p + jnp.asarray(
+                    rng.standard_normal(p.shape) * factor, p.dtype), params)
+        return out, True
+
+    def _apply_payload_faults(self, trained, sel, delivered, t_deliver):
+        """Corrupt/poison the *delivered* rows of a trained cohort at
+        their delivery times (sync engines). Non-delivered rows carry
+        weight 0 and are skipped — a lost update cannot also be
+        corrupted. Returns (trained, n_corrupted). Callers gate on
+        ``faults.cfg.has_payload_faults`` so the zero-rate path never
+        rebuilds the tree."""
+        ref = self._tx_global()
+        n_corr = 0
+        for i, k in enumerate(sel):
+            if delivered is not None and not delivered[i] > 0:
+                continue
+            trained, bad = self._corrupt_row(trained, i, int(k),
+                                             float(t_deliver[i]), ref)
+            n_corr += int(bad)
+        return trained, n_corr
 
     # -- energy accounting ----------------------------------------------
     def _post_recovery_contact(self, k: int, t: float):
@@ -573,7 +706,7 @@ class FedAvgSat(SpaceifiedFL):
             + np.maximum(proj["ret_avail"][ks] - proj["train_end"][ks], 0.0)
         comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = proj["train_end"][ks] - proj["recv_end"][ks]
-        n_flt, drops, rebill = 0, 0, 0.0
+        n_flt, drops, rebill, n_corr, n_clip = 0, 0, 0.0, 0, 0
         if self.faults is None:
             t_round_end = float(ends.max())
         else:
@@ -584,8 +717,13 @@ class FedAvgSat(SpaceifiedFL):
             n_flt += self._selection_faulted(proj)
             got = delivered > 0            # the server waits for deliveries
             t_round_end = float(ends[got].max() if got.any() else ends.max())
+            if self.faults.cfg.has_payload_faults:
+                # corrupt/poison delivered rows at their delivery times —
+                # the bytes were billed above; only the weights went bad
+                trained, n_corr = self._apply_payload_faults(
+                    trained, sel, delivered, ends)
         if float(n_k.sum()) > 0.0:         # always true when faults are off
-            self.global_params = self._aggregate(trained, n_k)
+            self.global_params, n_clip = self._aggregate(trained, n_k)
         wh, skipped = self._round_energy(proj, ks, trains, comms, t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
@@ -596,7 +734,8 @@ class FedAvgSat(SpaceifiedFL):
                            skipped_low_power=skipped,
                            comm_s_by_sat=dict(zip(sel, comms.tolist())),
                            skipped_faulted=n_flt, dropped_contacts=drops,
-                           retransmit_bytes=rebill)
+                           retransmit_bytes=rebill, corrupted_updates=n_corr,
+                           clipped_updates=n_clip)
 
 
 class FedProxSat(SpaceifiedFL):
@@ -634,7 +773,7 @@ class FedProxSat(SpaceifiedFL):
             + np.maximum(projf["ret_avail"][ks] - train_end, 0.0)
         comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = train_end - recv_end
-        n_flt, drops, rebill = 0, 0, 0.0
+        n_flt, drops, rebill, n_corr, n_clip = 0, 0, 0.0, 0, 0
         if self.faults is None:
             t_round_end = float(ends.max())
         else:
@@ -647,8 +786,11 @@ class FedProxSat(SpaceifiedFL):
             n_flt += self._selection_faulted(projf)
             got = delivered > 0
             t_round_end = float(ends[got].max() if got.any() else ends.max())
+            if self.faults.cfg.has_payload_faults:
+                trained, n_corr = self._apply_payload_faults(
+                    trained, sel, delivered, ends)
         if float(n_k.sum()) > 0.0:
-            self.global_params = self._aggregate(trained, n_k)
+            self.global_params, n_clip = self._aggregate(trained, n_k)
         wh, skipped = self._round_energy(projf, ks, trains, comms,
                                          t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
@@ -660,7 +802,8 @@ class FedProxSat(SpaceifiedFL):
                            skipped_low_power=skipped,
                            comm_s_by_sat=dict(zip(sel, comms.tolist())),
                            skipped_faulted=n_flt, dropped_contacts=drops,
-                           retransmit_bytes=rebill)
+                           retransmit_bytes=rebill, corrupted_updates=n_corr,
+                           clipped_updates=n_clip)
 
 
 class FedBuffSat(SpaceifiedFL):
@@ -747,7 +890,7 @@ class FedBuffSat(SpaceifiedFL):
                     continue
                 ep = int(np.clip((nxt[0] - recv_end) // ep_s[k], 1,
                                  cfg.max_local_epochs))
-                t_done, d, rb, lost = self._walk_drops(k, float(nxt[0]))
+                t_done, d, rb, lost = self._walk_drops(k, nxt)
                 if lost:            # every return window drops: sits out
                     continue
                 heapq.heappush(heap, (t_done, k))
@@ -766,6 +909,7 @@ class FedBuffSat(SpaceifiedFL):
         idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
         energy_acc, skip_acc = 0.0, 0
         fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
+        corr_acc = 0
         comm_by: Dict[int, float] = {}
         while heap and r < max_rounds:
             t_ret, k = heapq.heappop(heap)
@@ -789,6 +933,15 @@ class FedBuffSat(SpaceifiedFL):
                                     cfg.prox_mu, True, client_params[k])
                 if cfg.quant_bits:  # the returned model crosses the radio
                     trained = quantize_roundtrip(trained, cfg.quant_bits)
+                if self.faults is not None \
+                        and self.faults.cfg.has_payload_faults:
+                    # the payload may be corrupted/poisoned in flight:
+                    # the delivery still bills its bytes, the buffered
+                    # weights are what went bad. Reference = the pickup
+                    # version the client trained from.
+                    trained, bad = self._payload_fault_model(
+                        k, trained, t_ret, client_params[k])
+                    corr_acc += int(bad)
                 stale = r - pickup_round[k]
                 wgt = (1.0 + stale) ** (-cfg.staleness_exponent)
                 buf.append((trained, client_params[k], wgt))
@@ -842,8 +995,7 @@ class FedBuffSat(SpaceifiedFL):
             if nxt is not None:
                 ev_t = float(nxt[0]) + t_down
                 if self.faults is not None:
-                    t_done2, d2, rb2, lost = self._walk_drops(k,
-                                                              float(nxt[0]))
+                    t_done2, d2, rb2, lost = self._walk_drops(k, nxt)
                     if lost:        # every remaining return window drops
                         nxt = None
                     else:
@@ -890,8 +1042,18 @@ class FedBuffSat(SpaceifiedFL):
                 stacked_base = jax.tree.map(lambda *xs: jnp.stack(xs),
                                             *[b[1] for b in buf])
                 wgts = jnp.asarray([b[2] for b in buf], jnp.float32)
-                self.global_params = apply_buffered_deltas(
-                    self.global_params, stacked_new, stacked_base, wgts)
+                n_clip = 0
+                if self.aggregator is not None:
+                    # robust flush: the estimator sees the staleness-
+                    # weighted deltas (zero reference), so a poisoned or
+                    # corrupted buffered row is attenuated before it
+                    # touches the global
+                    self.global_params, n_clip = robust_apply_buffered_deltas(
+                        self.global_params, stacked_new, stacked_base, wgts,
+                        self.aggregator, mode=cfg.quant_kernel)
+                else:
+                    self.global_params = apply_buffered_deltas(
+                        self.global_params, stacked_new, stacked_base, wgts)
                 buf = []
                 acc = self.evaluate() if r % cfg.eval_every == 0 else \
                     (self.records[-1].accuracy if self.records else 0.0)
@@ -905,11 +1067,13 @@ class FedBuffSat(SpaceifiedFL):
                     if epochs_of else 0.0,
                     energy_wh=energy_acc, skipped_low_power=skip_acc,
                     comm_s_by_sat=comm_by, skipped_faulted=fault_acc,
-                    dropped_contacts=drop_acc, retransmit_bytes=rebill_acc))
+                    dropped_contacts=drop_acc, retransmit_bytes=rebill_acc,
+                    corrupted_updates=corr_acc, clipped_updates=n_clip))
                 t_round_start = t_ret
                 idle_acc = comm_acc = train_acc = 0.0
                 energy_acc, skip_acc = 0.0, 0
                 fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
+                corr_acc = 0
                 comm_by = {}
                 n_ev = 0
                 r += 1

@@ -13,6 +13,7 @@ from repro.kernels import ref
 from repro.kernels.quant_agg import quant_agg, quant_agg_stacked
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.swa_attention import swa_attention
+from repro.kernels.trimmed_agg import trimmed_agg_stacked
 
 
 def default_interpret() -> bool:
@@ -53,6 +54,27 @@ def quantized_stacked_accumulate(acc, q, sw, mode="auto"):
                          "'auto', 'pallas', 'pallas_interpret' or 'jnp'")
     return quant_agg_stacked(acc, q, sw,
                              interpret=(mode == "pallas_interpret"))
+
+
+_TRIMMED_REF = jax.jit(ref.trimmed_agg_stacked_ref)
+
+
+def trimmed_stacked_combine(x, rank_weights, mode="auto"):
+    """sum_r rw[r] * sort_over_clients(x)[r] for a whole stacked cohort —
+    the rank-based robust-aggregation hot path (coordinate-wise trimmed
+    mean / median). Invalid/pad rows must be pre-set to +inf so they
+    sort last under zero rank weight. ``mode`` follows the same routing
+    contract as ``quantized_stacked_accumulate``: "auto" (pallas on TPU,
+    jnp elsewhere) | "pallas" (compiled) | "pallas_interpret" | "jnp"."""
+    if mode == "auto":
+        mode = default_quant_mode()
+    if mode == "jnp":
+        return _TRIMMED_REF(x, jnp.asarray(rank_weights, jnp.float32))
+    if mode not in ("pallas", "pallas_interpret"):
+        raise ValueError(f"unknown kernel mode {mode!r}; expected 'auto', "
+                         "'pallas', 'pallas_interpret' or 'jnp'")
+    return trimmed_agg_stacked(x, rank_weights,
+                               interpret=(mode == "pallas_interpret"))
 
 
 def quantized_inplace_aggregate(q_models, scales, weights, interpret=None):
@@ -142,6 +164,6 @@ def swa_flash_attention(q, k, v, window=0, causal=True, bq=128, bk=128,
 
 
 __all__ = ["quantized_weighted_accumulate", "quantized_inplace_aggregate",
-           "quantized_stacked_accumulate", "ssd_chunked_kernel",
-           "swa_flash_attention", "default_interpret", "default_quant_mode",
-           "ref"]
+           "quantized_stacked_accumulate", "trimmed_stacked_combine",
+           "ssd_chunked_kernel", "swa_flash_attention", "default_interpret",
+           "default_quant_mode", "ref"]

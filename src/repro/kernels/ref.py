@@ -19,6 +19,17 @@ def quant_agg_stacked_ref(acc, q, sw):
     return acc + deq.sum(0).reshape(acc.shape)
 
 
+def trimmed_agg_stacked_ref(x, rank_weights):
+    """sum_r rw[r] * sort(x, axis=0)[r]: x (K,) + shape f32 (invalid rows
+    pre-set to +inf), rank_weights (K,) f32. The select (not multiply)
+    keeps a zero-weighted +inf pad rank at exactly 0, never 0*inf=NaN."""
+    k = x.shape[0]
+    srt = jnp.sort(x.reshape(k, -1).astype(jnp.float32), axis=0)
+    rw = jnp.asarray(rank_weights, jnp.float32)
+    terms = jnp.where((rw != 0.0)[:, None], rw[:, None] * srt, 0.0)
+    return terms.sum(0).reshape(x.shape[1:])
+
+
 def ssd_chunk_ref(x, dt, A, B, C):
     """Intra-chunk SSD reference.
 

@@ -1,0 +1,96 @@
+"""Fused coordinate-wise sort + rank-weighted combine (Pallas TPU).
+
+The Byzantine-robust aggregators (``repro.core.aggregation``) are
+rank-based: coordinate-wise trimmed mean and coordinate-wise median both
+reduce a stacked cohort (K, ...) to ``sum_r rw[r] * sort(x, axis=0)[r]``
+for some rank-weight vector ``rw`` (uniform over the kept middle ranks
+for the trimmed mean, an indicator of the middle rank(s) for the
+median). This kernel fuses the per-coordinate sort and the weighted
+combine in one VMEM pass per tile, the robust sibling of
+``quant_agg.quant_agg_stacked``:
+
+  out = sum_r rw[r] * sort_over_clients(x)[r]     (one VMEM pass per tile)
+
+The sort across the K client rows is an odd-even transposition network
+unrolled over the static cohort width (K passes of pairwise
+min/max on whole (8, 256) tiles — K is the padded cohort width, so the
+unroll is bounded and compiles once per config). Pad/invalid cohort rows
+are pushed to +inf by the caller so they sort last; their rank weights
+are exactly 0 and the combine selects 0.0 for them (a `where`, not a
+multiply, so 0 * inf can never produce NaN).
+
+Tiling matches quant_agg: tensors are flattened and padded to
+(n_tiles, 8, TILE_LANES); each grid step owns one (8, 256) f32 tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quant_agg import TILE, TILE_LANES, TILE_SUB
+
+
+def _make_trimmed_kernel(n_clients: int):
+    """One grid step owns one (8, 256) output tile; the K client tiles
+    for that position stream through VMEM, are sorted coordinate-wise by
+    an unrolled odd-even transposition network, and combined with the
+    per-rank weights."""
+    def kernel(x_ref, rw_ref, out_ref):
+        rows = [x_ref[k] for k in range(n_clients)]
+        # odd-even transposition sort: after K passes every coordinate's
+        # rows are ascending (network depth K suffices for K inputs)
+        for p in range(n_clients):
+            for i in range(p % 2, n_clients - 1, 2):
+                lo = jnp.minimum(rows[i], rows[i + 1])
+                hi = jnp.maximum(rows[i], rows[i + 1])
+                rows[i], rows[i + 1] = lo, hi
+        out = jnp.zeros_like(rows[0])
+        for r in range(n_clients):
+            w = rw_ref[0, r]
+            # select, don't multiply: rank r may hold a +inf pad row and
+            # its zero weight must yield exactly 0, not 0 * inf = NaN
+            out = out + jnp.where(w != 0.0, w * rows[r], 0.0)
+        out_ref[...] = out
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trimmed_agg_tiles(x, rw, interpret=True):
+    """x (K, T, 8, L) f32; rw (1, K) f32 per-rank weights.
+    Returns (T, 8, L) = sum_r rw[r] * sort(x, axis=0)[r]."""
+    k, t = x.shape[0], x.shape[1]
+    return pl.pallas_call(
+        _make_trimmed_kernel(k),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((k, 1, TILE_SUB, TILE_LANES),
+                         lambda i: (0, i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_SUB, TILE_LANES), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape[1:], jnp.float32),
+        interpret=interpret,
+    )(x, rw)
+
+
+def trimmed_agg_stacked(x, rank_weights, interpret=True):
+    """Fused rank-based combine of a stacked cohort.
+
+    x: (K,) + shape f32 client rows (invalid/pad rows pre-set to +inf by
+    the caller so they sort last); rank_weights: (K,) f32 weights applied
+    to the coordinate-wise sorted rows (ascending). Returns ``shape``
+    f32 = sum_r rank_weights[r] * sort(x, axis=0)[r] in one pass over
+    the tiles — the trimmed-mean / median hot path."""
+    k = x.shape[0]
+    shape = x.shape[1:]
+    flat = x.reshape(k, -1).astype(jnp.float32)
+    n = flat.shape[1]
+    pad = (-n) % TILE
+    flat = jnp.pad(flat, ((0, 0), (0, pad))).reshape(
+        k, -1, TILE_SUB, TILE_LANES)
+    rw = jnp.asarray(rank_weights, jnp.float32).reshape(1, k)
+    out = trimmed_agg_tiles(flat, rw, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -31,11 +31,26 @@ query in vectorized form:
     reset wipes the satellite's local FL state (pending update, buffer
     slot, optimizer state) and loses any in-flight transmission — the
     round engines translate that into a zero-weight pad slot.
+  * **Silent payload corruption** — SEU bit-flips that corrupt a model
+    update in payload memory or on the wire *without any signal to the
+    server*: the radio delivers, the bytes are billed, the checksum-less
+    payload is garbage. Per-delivery Bernoulli(``corrupt_prob``) draws
+    use the same counter-based ``(seed, stream, sat, quantized time)``
+    RNG contract as contact drops; a firing draw also determines the
+    corruption *shape* (sign flip, scale blow-up, or large-magnitude
+    noise — see :meth:`FaultSim.corruption_at`), so a delivery's fate
+    and damage are one pure function of the fault seed.
   * **Energy-drain attack** (:class:`EnergyDrainAttack`) — the IWQoS'23
     adversarial scenario: an attacker-chosen contact/activity schedule
     that forces victim radios (or payload compute) to key, sized to
     maximize battery drain. See the class docstring for why
     ``eclipse_only=True`` is the attacker-optimal schedule.
+  * **Poison attack** (:class:`PoisonAttack`) — the IWQoS'23 adversarial
+    framing extended from energy to *updates*: adversary-controlled
+    satellites submit scaled malicious deltas (model replacement) on
+    every delivery. Unlike the stochastic SEU corruption this is
+    deterministic and targeted — the defense story is the pluggable
+    robust-aggregation layer (``repro.core.aggregation``).
 
 RNG convention (the repo's reproducibility contract): ``FLConfig.seed``
 drives the JAX PRNG key stream for model init + minibatch order;
@@ -57,6 +72,7 @@ _STREAM_OUTAGE = 1
 _STREAM_RESET = 2
 _STREAM_DROP = 3
 _STREAM_PAIR_DROP = 4
+_STREAM_CORRUPT = 5
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +117,34 @@ class EnergyDrainAttack:
 
 
 @dataclasses.dataclass(frozen=True)
+class PoisonAttack:
+    """Model-poisoning attack: adversary-controlled satellites submit
+    scaled malicious deltas (the IWQoS'23 adversarial framing extended
+    from energy-drain to updates).
+
+    Every update a compromised satellite delivers is replaced by the
+    model-replacement attack of Bhagoji et al. / Blanchard et al.: the
+    honest local delta is reversed and amplified,
+
+        submitted = reference - scale * (trained - reference)
+
+    where ``reference`` is the broadcast model the client trained from.
+    With plain weighted-mean aggregation one such update drags the
+    global model ``scale`` cohort-shares backwards per round; rank-based
+    robust aggregators (trimmed mean, median, Krum) reject it as an
+    outlier coordinate-wise.
+
+    ``satellites`` lists the compromised satellite indices; ``scale``
+    is the amplification factor (1.0 = plain sign flip of the delta).
+    """
+    satellites: Tuple[int, ...] = ()
+    scale: float = 5.0
+
+    def compromised(self, k: int) -> bool:
+        return int(k) in self.satellites
+
+
+@dataclasses.dataclass(frozen=True)
 class FaultConfig:
     """Fault-injection knobs (``FLConfig.faults``).
 
@@ -113,6 +157,16 @@ class FaultConfig:
         (return downlink, FedBuff pickup/return, AutoFLSat ISL pair hop)
         is lost. The transmission is retried at the next usable window
         with its bytes re-billed (``RoundRecord.retransmit_bytes``).
+    corrupt_prob
+        Probability that a *delivered* model update was silently
+        corrupted by an SEU in payload memory or on the wire. Unlike a
+        drop, the server receives (and bills) the transmission — the
+        payload is just wrong: the update row is sign-flipped, blown up
+        by a large scale factor, or overwritten with large-magnitude
+        noise (the shape is part of the seeded draw,
+        :meth:`FaultSim.corruption_at`). Counted in
+        ``RoundRecord.corrupted_updates``; the defense is
+        ``FLConfig.aggregator`` (robust aggregation).
     radiation_rate_per_day
         Poisson rate of radiation resets per satellite per day. A reset
         wipes the satellite's local FL state and loses its in-flight
@@ -126,13 +180,18 @@ class FaultConfig:
     attack
         Optional :class:`EnergyDrainAttack`. Requires ``FLConfig.energy``
         (the attack drains batteries, so there must be batteries).
+    poison
+        Optional :class:`PoisonAttack`: the listed satellites replace
+        every update they deliver with a scaled malicious delta.
     """
     mean_up_s: float = float("inf")
     mean_down_s: float = 1800.0
     drop_prob: float = 0.0
+    corrupt_prob: float = 0.0
     radiation_rate_per_day: float = 0.0
     seed: Optional[int] = None
     attack: Optional[EnergyDrainAttack] = None
+    poison: Optional[PoisonAttack] = None
 
     @property
     def seed_value(self) -> int:
@@ -145,6 +204,14 @@ class FaultConfig:
     @property
     def has_resets(self) -> bool:
         return self.radiation_rate_per_day > 0.0
+
+    @property
+    def has_payload_faults(self) -> bool:
+        """True when deliveries can carry bad payloads — SEU corruption
+        or a poison attack. The engines skip the payload pass entirely
+        otherwise, keeping the zero-rate path bitwise-identical."""
+        return self.corrupt_prob > 0.0 or (
+            self.poison is not None and len(self.poison.satellites) > 0)
 
 
 def _sat_rng(seed: int, stream: int, k: int) -> np.random.Generator:
@@ -273,13 +340,16 @@ class FaultSim:
     # -- radiation resets -----------------------------------------------
     def resets_between(self, ks, t_from, t_to) -> np.ndarray:
         """Batched count of radiation resets of ``ks[i]`` in
-        ``(t_from[i], t_to[i]]`` (searchsorted on the padded CSR rows)."""
+        ``(t_from[i], t_to[i]]`` (searchsorted on the padded CSR rows).
+        An empty or inverted interval (``t_to <= t_from``) counts zero —
+        the clamp keeps the contract total rather than letting the
+        cumulative-count difference go negative."""
         ks = np.asarray(ks, np.int64)
         a = np.broadcast_to(np.asarray(t_from, np.float64), ks.shape)
         b = np.broadcast_to(np.asarray(t_to, np.float64), ks.shape)
         rp = self._rst_pad[ks]
-        return (np.sum(rp <= b[:, None], axis=1)
-                - np.sum(rp <= a[:, None], axis=1))
+        return np.maximum(np.sum(rp <= b[:, None], axis=1)
+                          - np.sum(rp <= a[:, None], axis=1), 0)
 
     def reset_in(self, k: int, t_from: float, t_to: float) -> bool:
         """Scalar ``resets_between`` > 0 (FedBuff's per-event check)."""
@@ -306,3 +376,38 @@ class FaultSim:
         """Seeded fate of the AutoFLSat ISL pair hop (ci, cj) attempted
         at ``t_attempt`` (independent per hop, per attempt)."""
         return self._bernoulli(_STREAM_PAIR_DROP, ci, cj, t_attempt)
+
+    # -- silent payload corruption (counter-based, order-independent) ----
+    def corruption_at(self, k: int, t_deliver: float):
+        """Seeded corruption draw for the update satellite ``k`` delivers
+        at ``t_deliver`` — the same counter-based contract as the drop
+        draws: one ``default_rng`` keyed by (seed, stream, sat, ms), so a
+        delivery's fate AND damage shape are a pure function of the seed,
+        independent of query order or engine.
+
+        Returns ``None`` (intact, the overwhelmingly common case) or a
+        ``(mode, factor, noise_seed)`` tuple:
+
+          * ``("sign_flip", -1.0, s)`` — the payload's sign bits flipped;
+          * ``("scale", f, s)`` with f ~ LogUniform[8, 128] — an exponent
+            upset blows the magnitudes up;
+          * ``("noise", f, s)`` with f ~ LogUniform[4, 64] — wide memory
+            corruption: noise of f x the tensor's RMS overwrites the row
+            (``noise_seed`` seeds the noise tensor draw so the damage
+            itself is reproducible).
+        """
+        if self.cfg.corrupt_prob <= 0.0:
+            return None
+        key = [self.cfg.seed_value, _STREAM_CORRUPT, int(k), 0,
+               int(round(float(t_deliver) * 1e3))]
+        rng = np.random.default_rng(key)
+        if rng.random() >= self.cfg.corrupt_prob:
+            return None
+        mode = ("sign_flip", "scale", "noise")[int(rng.integers(3))]
+        if mode == "sign_flip":
+            factor = -1.0
+        elif mode == "scale":
+            factor = float(np.exp(rng.uniform(np.log(8.0), np.log(128.0))))
+        else:
+            factor = float(np.exp(rng.uniform(np.log(4.0), np.log(64.0))))
+        return mode, factor, int(rng.integers(2 ** 31))

@@ -124,6 +124,16 @@ class SimResult:
         """Bytes re-billed by drop-retry transmissions over the run."""
         return float(sum(r.retransmit_bytes for r in self.records))
 
+    def total_corrupted_updates(self) -> int:
+        """Delivered updates whose payload was SEU-corrupted or poisoned
+        in flight, summed over rounds (0 when payload faults are off)."""
+        return int(sum(r.corrupted_updates for r in self.records))
+
+    def total_clipped_updates(self) -> int:
+        """Rows the robust aggregator attenuated/rejected, summed over
+        rounds (0 under the plain weighted mean)."""
+        return int(sum(r.clipped_updates for r in self.records))
+
     def summary(self) -> dict:
         return {
             "algorithm": self.config.algorithm,
@@ -141,6 +151,8 @@ class SimResult:
             "skipped_faulted": self.total_skipped_faulted(),
             "dropped_contacts": self.total_dropped_contacts(),
             "retransmit_bytes": round(self.total_retransmit_bytes(), 1),
+            "corrupted_updates": self.total_corrupted_updates(),
+            "clipped_updates": self.total_clipped_updates(),
         }
 
 

@@ -43,3 +43,47 @@ def test_missing_leaf_rejected(tmp_path):
     with pytest.raises(KeyError):
         restore_pytree(p, jax.eval_shape(
             lambda: {"a": jnp.zeros((2,)), "b": jnp.zeros((2,))}))
+
+
+def test_save_is_atomic_and_leaves_no_temp_files(tmp_path):
+    """The write goes through a same-directory temp file + os.replace:
+    after a (successful) save only the final .npz remains, and saving
+    over an existing checkpoint replaces it wholesale."""
+    p = tmp_path / "ckpt.npz"
+    save_pytree(p, {"w": jnp.ones((4,))})
+    save_pytree(p, {"w": jnp.full((4,), 2.0)})     # overwrite in place
+    assert sorted(f.name for f in tmp_path.iterdir()) == ["ckpt.npz"]
+    back = restore_pytree(p, jax.eval_shape(lambda: {"w": jnp.zeros((4,))}))
+    np.testing.assert_array_equal(np.asarray(back["w"]), 2.0)
+
+
+def test_suffix_appended_like_np_savez(tmp_path):
+    """np.savez appends .npz to suffix-less paths; the atomic writer must
+    land the file at the same place the legacy writer did."""
+    out = save_pytree(tmp_path / "ckpt", {"w": jnp.zeros((2,))})
+    assert out.name == "ckpt.npz" and out.exists()
+
+
+def test_crc_mismatch_raises(tmp_path):
+    """A bit flipped on disk (an array's bytes tampered, CRCs left as
+    written) must surface as ChecksumError, not restore silently."""
+    from repro.checkpoint.checkpoint import ChecksumError
+    p = tmp_path / "ckpt.npz"
+    save_pytree(p, {"w": jnp.arange(8, dtype=jnp.float32)})
+    data = dict(np.load(p, allow_pickle=False))
+    assert "__meta__/crc/w" in data                # CRCs are stored
+    bad = data["w"].copy()
+    bad[3] += 1.0                                  # the silent corruption
+    data["w"] = bad
+    np.savez(p, **data)                            # re-pack, stale CRC
+    with pytest.raises(ChecksumError):
+        restore_pytree(p, jax.eval_shape(lambda: {"w": jnp.zeros((8,))}))
+
+
+def test_legacy_checkpoint_without_crc_restores(tmp_path):
+    """Checkpoints written before CRCs existed carry no __meta__/crc
+    entries and must restore without verification."""
+    p = tmp_path / "ckpt.npz"
+    np.savez(p, w=np.ones((3,), np.float32))
+    back = restore_pytree(p, jax.eval_shape(lambda: {"w": jnp.zeros((3,))}))
+    np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)

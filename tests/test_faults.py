@@ -226,8 +226,9 @@ def test_radiation_wipes_updates(plan, ds):
 
 
 def test_fedbuff_survives_outages_and_drops(plan, ds):
+    # seed chosen so the pass-granularity drop walk actually loses passes
     flt = FaultConfig(mean_up_s=20_000.0, mean_down_s=3000.0,
-                      drop_prob=0.3, radiation_rate_per_day=3.0, seed=6)
+                      drop_prob=0.3, radiation_rate_per_day=3.0, seed=3)
     algo = FedBuffSat(plan, _FAST_HW, ds,
                       _cfg(max_rounds=3, buffer_size=3, faults=flt))
     recs = algo.run()

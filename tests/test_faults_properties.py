@@ -1,0 +1,167 @@
+"""Property tests for FaultSim's interval-boundary semantics.
+
+The endpoint conventions are load-bearing for the engines:
+
+  * an outage spans ``[start, end)`` — the satellite is down at ``start``
+    and back up exactly at ``end`` (``available``);
+  * ``next_up`` is the identity outside outages and the containing
+    outage's end inside one — and idempotent;
+  * ``resets_between`` counts events in the half-open ``(a, b]`` — a
+    reset exactly at the pickup time ``a`` belongs to the *previous*
+    episode, one exactly at the delivery time ``b`` wipes this one;
+  * the padded ``(K, Wmax)`` CSR views use an ``inf`` tail — satellites
+    with fewer events than the widest row must answer every query as if
+    the padding did not exist.
+
+When ``hypothesis`` is installed the properties run under its shrinking
+case generator; otherwise a seeded numpy sweep drives the exact same
+checks (the container does not ship hypothesis, and installing deps is
+out of scope — the properties themselves are identical either way).
+"""
+import numpy as np
+import pytest
+
+from repro.sim.faults import FaultConfig, FaultSim
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                 # container default
+    HAVE_HYPOTHESIS = False
+
+HORIZON = 200_000.0
+
+
+def _sim(seed: int, n_sats: int, outages: bool, resets: bool) -> FaultSim:
+    cfg = FaultConfig(
+        mean_up_s=3000.0 if outages else float("inf"),
+        mean_down_s=1500.0,
+        radiation_rate_per_day=40.0 if resets else 0.0,
+        seed=seed)
+    return FaultSim(cfg, n_sats, HORIZON)
+
+
+def _outage_rows(fs: FaultSim, k: int):
+    s = fs._out_start[fs._out_off[k]:fs._out_off[k + 1]]
+    e = fs._out_end[fs._out_off[k]:fs._out_off[k + 1]]
+    return s, e
+
+
+# -- the properties (pure check functions, driven by either generator) --
+
+
+def check_available_boundaries(fs: FaultSim):
+    """[start, end): down at start, inside, and 1 ulp before end; up
+    again exactly at end and (when clear of the previous interval) just
+    before start."""
+    for k in range(fs.n_sats):
+        s, e = _outage_rows(fs, k)
+        for i in range(len(s)):
+            assert not fs.available(s[i])[k]                  # closed start
+            assert not fs.available((s[i] + e[i]) / 2.0)[k]
+            assert not fs.available(np.nextafter(e[i], -np.inf))[k]
+            assert fs.available(e[i])[k]                      # open end
+            before = np.nextafter(s[i], -np.inf)
+            if i == 0 or e[i - 1] <= before:
+                assert fs.available(before)[k]
+
+
+def check_next_up_semantics(fs: FaultSim):
+    """Identity outside outages, containing-outage end inside, and
+    idempotent everywhere; exactly-at-end is already 'up'."""
+    ks = np.arange(fs.n_sats)
+    rng = np.random.default_rng(0)
+    ts = rng.uniform(0.0, HORIZON, fs.n_sats)
+    up = fs.next_up(ks, ts)
+    for k in range(fs.n_sats):
+        s, e = _outage_rows(fs, k)
+        inside = (s <= ts[k]) & (ts[k] < e)
+        if inside.any():
+            assert up[k] == e[np.argmax(inside)]
+        else:
+            assert up[k] == ts[k]
+        assert fs.available(np.full(fs.n_sats, up[k]))[k]
+    again = fs.next_up(ks, up)
+    np.testing.assert_array_equal(again, up)                  # idempotent
+    for k in range(fs.n_sats):
+        s, e = _outage_rows(fs, k)
+        for i in range(len(s)):
+            assert fs.next_up(np.array([k]), np.array([s[i]]))[0] == e[i]
+            assert fs.next_up(np.array([k]), np.array([e[i]]))[0] == e[i]
+
+
+def check_resets_half_open(fs: FaultSim):
+    """(a, b]: the reset at t is excluded when a == t, included when
+    b == t; empty and inverted intervals count zero; totals match a
+    brute-force scan of the CSR row."""
+    for k in range(fs.n_sats):
+        tt = fs._rst_t[fs._rst_off[k]:fs._rst_off[k + 1]]
+        for t in tt[:8]:
+            eps_lo = np.nextafter(t, -np.inf)
+            assert fs.resets_between(
+                np.array([k]), np.array([eps_lo]), np.array([t]))[0] == 1
+            nxt = np.nextafter(t, np.inf)        # a == t excludes the reset
+            assert fs.resets_between(
+                np.array([k]), np.array([t]), np.array([nxt]))[0] \
+                == int(np.sum((tt > t) & (tt <= nxt)))
+            assert fs.resets_between(
+                np.array([k]), np.array([t]), np.array([t]))[0] == 0
+    rng = np.random.default_rng(1)
+    ks = rng.integers(0, fs.n_sats, 32)
+    a = rng.uniform(0.0, HORIZON, 32)
+    b = a + rng.uniform(-5000.0, 30_000.0, 32)   # some inverted intervals
+    got = fs.resets_between(ks, a, b)
+    for i, k in enumerate(ks):
+        tt = fs._rst_t[fs._rst_off[k]:fs._rst_off[k + 1]]
+        assert got[i] == int(np.sum((tt > a[i]) & (tt <= b[i])))
+
+
+def check_inf_tail_inert(fs: FaultSim):
+    """Satellites with fewer events than Wmax carry inf padding; queries
+    past every real event must see a healthy satellite, not the pad."""
+    t_far = HORIZON * 10.0
+    assert fs.available(t_far).all()
+    ks = np.arange(fs.n_sats)
+    np.testing.assert_array_equal(fs.next_up(ks, np.full(fs.n_sats, t_far)),
+                                  np.full(fs.n_sats, t_far))
+    assert (fs.resets_between(ks, np.full(fs.n_sats, t_far),
+                              np.full(fs.n_sats, t_far * 2)) == 0).all()
+    # a satellite with zero events answers identity everywhere
+    counts = fs._out_counts
+    if (counts == 0).any():
+        k0 = int(np.argmin(counts))
+        assert fs.available(1234.5)[k0]
+        assert fs.next_up(np.array([k0]), np.array([1234.5]))[0] == 1234.5
+
+
+def _run_all(seed: int, n_sats: int):
+    fs = _sim(seed, n_sats, outages=True, resets=True)
+    check_available_boundaries(fs)
+    check_next_up_semantics(fs)
+    check_resets_half_open(fs)
+    check_inf_tail_inert(fs)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), n_sats=st.integers(1, 9))
+    def test_interval_boundary_properties(seed, n_sats):
+        _run_all(seed, n_sats)
+else:
+    @pytest.mark.parametrize("seed,n_sats", [
+        (s, n) for s in range(12) for n in (1, 3, 7)])
+    def test_interval_boundary_properties(seed, n_sats):
+        _run_all(seed, n_sats)
+
+
+def test_no_faults_sim_is_fully_inert():
+    """The all-defaults FaultConfig builds empty CSR arrays whose padded
+    views are pure inf — every query is the identity/True/zero."""
+    fs = FaultSim(FaultConfig(), 5, HORIZON)
+    assert np.isinf(fs._out_start_pad).all()
+    assert np.isinf(fs._rst_pad).all()
+    check_inf_tail_inert(fs)
+    ts = np.linspace(0.0, HORIZON, 11)
+    for t in ts:
+        assert fs.available(t).all()

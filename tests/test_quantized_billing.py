@@ -1,0 +1,108 @@
+"""Retransmission billing under quantization (PR 5/6 billing audit).
+
+With ``quant_bits > 0`` every model crossing a link is the QuAFL wire
+format, so every *re*-transmission must re-bill the compressed wire size
+— not the float32 size. The engines get this for free because
+``SpaceifiedFL.tx_bytes`` is ``transmit_bytes(params, quant_bits)`` and
+both retry paths (the sync drop-retry walk and the AutoFLSat failed ISL
+hop) bill multiples of ``tx_bytes``; these tests lock that invariant in
+with hand-checkable arithmetic so a future refactor that reverts
+``tx_bytes`` to the f32 size (or bills retries from a different field)
+fails loudly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autoflsat import AutoFLSat
+from repro.core.contact_plan import build_contact_plan
+from repro.core.quantize import transmit_bytes
+from repro.core.spaceify import FedAvgSat, FLConfig
+from repro.data.synthetic import make_federated_dataset
+from repro.sim.faults import FaultConfig
+from repro.sim.hardware import HardwareProfile
+
+HORIZON = 0.8 * 86_400.0
+_FAST_HW = HardwareProfile(name="fast", epoch_time_s=50.0,
+                           downlink_rate_bps=8e9, uplink_rate_bps=8e9,
+                           isl_rate_bps=8e9)
+QUANT_BITS = 4
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_contact_plan(2, 3, 2, horizon_s=HORIZON, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_dataset("femnist", 6, 32)
+
+
+def _quant_wire_bytes(params, bits):
+    """Hand-computed QuAFL wire size: bits/8 per weight + one f32 scale
+    per tensor (the transmit_bytes contract, recomputed from scratch)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(leaf.size for leaf in leaves) * bits / 8 + 4 * len(leaves)
+
+
+def test_tx_bytes_is_the_quantized_wire_size(plan, ds):
+    cfg = FLConfig(model="mlp", quant_bits=QUANT_BITS)
+    algo = FedAvgSat(plan, _FAST_HW, ds, cfg)
+    want = _quant_wire_bytes(algo.global_params, QUANT_BITS)
+    assert algo.tx_bytes == pytest.approx(want)
+    assert algo.tx_bytes == pytest.approx(
+        transmit_bytes(algo.global_params, QUANT_BITS))
+    # and it is dramatically smaller than the f32 size the retry walk
+    # must NOT bill (4 bits vs 32 bits: 8x on the weights)
+    f32 = _quant_wire_bytes(algo.global_params, 32) - 4 * len(
+        jax.tree_util.tree_leaves(algo.global_params))
+    assert algo.tx_bytes < f32 / 7
+
+
+def test_drop_walk_rebills_quantized_wire_size(plan, ds):
+    """drop_prob=1 + quant_bits: every re-billed byte is a whole
+    *quantized* model. The lost walk bills attempts beyond each client's
+    first, so rebill == (drops - n_lost) * quantized_tx_bytes — checkable
+    by hand from the record counters alone."""
+    cfg = FLConfig(model="mlp", clients_per_round=2, epochs=1, batch_size=8,
+                   max_rounds=1, max_local_epochs=4, quant_bits=QUANT_BITS,
+                   faults=FaultConfig(drop_prob=1.0, seed=7))
+    algo = FedAvgSat(plan, _FAST_HW, ds, cfg)
+    recs = algo.run()
+    r = recs[0]
+    assert r.dropped_contacts > 0
+    n_lost = len(r.participants)           # all walks exhaust the horizon
+    want = (r.dropped_contacts - n_lost) * _quant_wire_bytes(
+        algo.global_params, QUANT_BITS)
+    assert r.retransmit_bytes == pytest.approx(want)
+
+
+def test_moderate_drops_rebill_multiples_of_quant_bytes(plan, ds):
+    cfg = FLConfig(model="mlp", clients_per_round=4, epochs=1, batch_size=8,
+                   max_rounds=6, max_local_epochs=4, quant_bits=QUANT_BITS,
+                   faults=FaultConfig(drop_prob=0.5, seed=1))
+    algo = FedAvgSat(plan, _FAST_HW, ds, cfg)
+    recs = algo.run()
+    rebill = sum(r.retransmit_bytes for r in recs)
+    assert rebill > 0.0
+    q = _quant_wire_bytes(algo.global_params, QUANT_BITS)
+    assert rebill == pytest.approx(round(rebill / q) * q)
+    # a f32-sized rebill would be ~7x larger and cannot alias a multiple
+    assert (rebill / q) % 1 == pytest.approx(0.0, abs=1e-6)
+
+
+def test_autoflsat_failed_hop_rebills_2x_quantized(plan, ds):
+    """Every failed AutoFLSat ISL pair hop loses the exchange in both
+    directions: rebill == 2 * quantized_tx_bytes * dropped_hops."""
+    cfg = FLConfig(model="mlp", epochs=1, batch_size=8, max_rounds=4,
+                   max_local_epochs=4, quant_bits=QUANT_BITS,
+                   faults=FaultConfig(drop_prob=0.5, seed=3))
+    algo = AutoFLSat(plan, _FAST_HW, ds, cfg)
+    recs = algo.run()
+    drops = sum(r.dropped_contacts for r in recs)
+    rebill = sum(r.retransmit_bytes for r in recs)
+    assert drops > 0
+    q = _quant_wire_bytes(algo.global_params, QUANT_BITS)
+    assert rebill == pytest.approx(2.0 * q * drops)

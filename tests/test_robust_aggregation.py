@@ -1,0 +1,224 @@
+"""The Byzantine-robust aggregation layer: registry resolution, pad-row
+safety, defense behaviour against a model-replacement poison row, and the
+FedBuff robust flush. Estimator outputs are compared against hand-rolled
+numpy oracles over the valid rows only."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.aggregation import (KrumAggregator, MedianAggregator,
+                                    NormClipAggregator, ROBUST_AGGREGATORS,
+                                    RobustAggregator, TrimmedMeanAggregator,
+                                    make_robust_aggregator,
+                                    robust_apply_buffered_deltas,
+                                    weighted_average)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cohort(k=5, shapes=((17,), (4, 9))):
+    keys = jax.random.split(KEY, len(shapes))
+    return {f"p{i}": jax.random.normal(kk, (k,) + s)
+            for i, (kk, s) in enumerate(zip(keys, shapes))}
+
+
+def _reference(stacked):
+    return jax.tree.map(lambda leaf: jnp.zeros(leaf.shape[1:]), stacked)
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_registry_resolution():
+    assert make_robust_aggregator(None) is None
+    assert make_robust_aggregator("mean") is None
+    for name, cls in ROBUST_AGGREGATORS.items():
+        agg = make_robust_aggregator(name)
+        assert isinstance(agg, cls)
+        assert agg.name == name
+    inst = TrimmedMeanAggregator(trim=0.3)
+    assert make_robust_aggregator(inst) is inst
+
+
+def test_registry_rejects_unknown_and_bad_types():
+    with pytest.raises(ValueError, match="unknown aggregator"):
+        make_robust_aggregator("huber")
+    with pytest.raises(TypeError):
+        make_robust_aggregator(3.14)
+
+
+def test_aggregators_are_frozen_dataclasses():
+    """Engines capture the instance at __init__; it must be immutable."""
+    agg = NormClipAggregator(multiplier=3.0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        agg.multiplier = 1.0
+
+
+# ------------------------------------------------------------- estimators
+
+
+def test_median_matches_numpy_over_valid_rows():
+    stacked = _cohort(k=5)
+    w = np.array([1.0, 2.0, 1.0, 0.0, 0.0])
+    out, n_att = MedianAggregator().aggregate(
+        stacked, w, _reference(stacked), mode="jnp")
+    assert n_att == 1                       # m=3 valid -> max(m-2, 0)
+    for key, leaf in stacked.items():
+        want = np.median(np.asarray(leaf[:3]), axis=0)
+        np.testing.assert_allclose(np.asarray(out[key]), want,
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_trimmed_mean_zero_trim_equals_unweighted_mean():
+    stacked = _cohort(k=4)
+    w = np.ones(4)
+    out, n_att = TrimmedMeanAggregator(trim=0.0).aggregate(
+        stacked, w, _reference(stacked), mode="jnp")
+    assert n_att == 0
+    for key, leaf in stacked.items():
+        np.testing.assert_allclose(np.asarray(out[key]),
+                                   np.asarray(leaf).mean(0),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_trimmed_mean_drops_the_extremes():
+    """With one wild row and trim large enough to drop one per end, the
+    output equals the mean of the middle ranks — coordinate-wise."""
+    k = 5
+    stacked = {"w": jax.random.normal(KEY, (k, 200))}
+    stacked["w"] = stacked["w"].at[2].set(1e6)      # corrupt row
+    out, n_att = TrimmedMeanAggregator(trim=0.25).aggregate(
+        stacked, np.ones(k), _reference(stacked), mode="jnp")
+    assert n_att == 2
+    srt = np.sort(np.asarray(stacked["w"]), axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), srt[1:4].mean(0),
+                               rtol=1e-5, atol=1e-6)
+    assert np.abs(np.asarray(out["w"])).max() < 100.0
+
+
+def test_norm_clip_shrinks_outlier_preserves_honest():
+    """Rows within multiplier x median norm pass through untouched; the
+    amplified row is shrunk onto the clip sphere."""
+    ref = {"w": jnp.zeros((30,))}
+    honest = jax.random.normal(KEY, (3, 30)) * 0.1
+    bad = honest[0:1] * 500.0
+    stacked = {"w": jnp.concatenate([honest, bad])}
+    w = np.ones(4)
+    out, n_att = NormClipAggregator(multiplier=2.0).aggregate(
+        stacked, w, {"w": ref["w"]}, mode="jnp")
+    assert n_att == 1
+    # the clipped bad row has norm == 2 x median of the 4 row norms
+    norms = np.linalg.norm(np.asarray(stacked["w"]), axis=1)
+    srt = np.sort(norms)
+    limit = 2.0 * 0.5 * (srt[1] + srt[2])
+    clipped_bad = np.asarray(bad[0]) * (limit / norms[3])
+    want = (np.asarray(honest).sum(0) + clipped_bad) / 4.0
+    np.testing.assert_allclose(np.asarray(out["w"]), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_krum_picks_a_row_from_the_honest_cluster():
+    """3 near-identical honest rows + 1 distant poison row: Krum's winner
+    is one of the honest rows, never the outlier."""
+    base = jax.random.normal(KEY, (1, 50))
+    honest = base + 0.01 * jax.random.normal(jax.random.PRNGKey(1), (3, 50))
+    poison = base + 100.0
+    stacked = {"w": jnp.concatenate([honest, poison])}
+    out, n_att = KrumAggregator(byzantine_f=1).aggregate(
+        stacked, np.ones(4), _reference(stacked), mode="jnp")
+    assert n_att == 3
+    dists = np.linalg.norm(np.asarray(stacked["w"])
+                           - np.asarray(out["w"])[None], axis=1)
+    assert int(np.argmin(dists)) in (0, 1, 2)
+    assert dists.min() == pytest.approx(0.0, abs=1e-6)
+
+
+# ----------------------------------------------------------- pad-row safety
+
+
+@pytest.mark.parametrize("name", sorted(ROBUST_AGGREGATORS))
+def test_non_finite_pad_rows_never_leak(name):
+    """A zero-weight pad row full of NaN/inf must not influence any
+    estimator: output == the same estimator over the real rows alone."""
+    real = _cohort(k=3)
+    w_real = np.array([1.0, 1.0, 2.0])
+    junk = jax.tree.map(lambda leaf: jnp.full((2,) + leaf.shape[1:],
+                                              jnp.nan), real)
+    padded = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), real, junk)
+    w_pad = np.concatenate([w_real, np.zeros(2)])
+    agg = make_robust_aggregator(name)
+    ref_real, ref_pad = _reference(real), _reference(padded)
+    out_p, att_p = agg.aggregate(padded, w_pad, ref_pad, mode="jnp")
+    out_r, att_r = agg.aggregate(real, w_real, ref_real, mode="jnp")
+    assert att_p == att_r
+    for key in real:
+        got = np.asarray(out_p[key])
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, np.asarray(out_r[key]),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------- defense vs model poison
+
+
+def test_rank_defenses_survive_model_replacement_mean_does_not():
+    """The PoisonAttack shape: submitted = (1+s)*ref - s*trained. With one
+    poisoned row in five, the plain mean is dragged ~s/5 of the way to
+    the mirrored model while trimmed mean and median stay near the honest
+    mean."""
+    ref = {"w": jnp.zeros((100,))}
+    honest = 1.0 + 0.05 * jax.random.normal(KEY, (5, 100))
+    s = 50.0
+    poisoned = honest.at[0].set((1 + s) * 0.0 - s * honest[0])
+    stacked = {"w": poisoned}
+    w = np.ones(5)
+    honest_mean = np.asarray(honest[1:]).mean(0)
+
+    plain = weighted_average(stacked, w)
+    assert np.abs(np.asarray(plain["w"]) - honest_mean).max() > 5.0
+
+    for agg in (TrimmedMeanAggregator(trim=0.2), MedianAggregator()):
+        out, _ = agg.aggregate(stacked, w, ref, mode="jnp")
+        assert np.abs(np.asarray(out["w"]) - honest_mean).max() < 0.5
+
+
+# ------------------------------------------------------ FedBuff robust flush
+
+
+def test_robust_apply_buffered_deltas_median_oracle():
+    """global += coordinate-wise median of the weighted deltas."""
+    g = {"w": jax.random.normal(KEY, (40,))}
+    base = jax.tree.map(lambda x: jnp.stack([x] * 3), g)
+    new = jax.tree.map(
+        lambda b: b + jax.random.normal(jax.random.PRNGKey(4), b.shape), base)
+    wts = jnp.array([0.5, 1.0, 2.0])
+    out, n_att = robust_apply_buffered_deltas(
+        g, new, base, wts, MedianAggregator(), mode="jnp")
+    assert n_att == 1
+    deltas = np.asarray(wts)[:, None] * (np.asarray(new["w"])
+                                         - np.asarray(base["w"]))
+    want = np.asarray(g["w"]) + np.median(deltas, axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_custom_aggregator_instance_is_used_verbatim():
+    """A user-supplied RobustAggregator subclass flows through the factory
+    and the flush helper unchanged."""
+    class First(RobustAggregator):
+        name = "first"
+
+        def aggregate(self, stacked_params, weights, reference, mode="auto"):
+            return jax.tree.map(lambda leaf: leaf[0], stacked_params), 7
+
+    agg = make_robust_aggregator(First())
+    g = {"w": jnp.zeros((8,))}
+    base = {"w": jnp.zeros((2, 8))}
+    new = {"w": jnp.ones((2, 8))}
+    out, n_att = robust_apply_buffered_deltas(
+        g, new, base, jnp.array([3.0, 5.0]), agg)
+    assert n_att == 7
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.0)

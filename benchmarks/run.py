@@ -2,13 +2,17 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all sections
   PYTHONPATH=src python -m benchmarks.run power quafl  # a subset
+  PYTHONPATH=src python -m benchmarks.run --smoke      # CI: fail hard
 
 Each section prints CSV rows; the roofline section reads the dry-run
 artifacts (run `python -m repro.launch.dryrun` first for fresh numbers).
+Without ``--smoke`` a failing section is reported and the harness keeps
+going (exploratory use); with it, any section error — or a section
+producing no rows — exits nonzero so CI catches a bit-rotted benchmark.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 from benchmarks.common import print_rows
@@ -36,20 +40,37 @@ SECTIONS = [
 
 
 def main() -> None:
-    want = set(sys.argv[1:])
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("sections", nargs="*",
+                    choices=[k for k, _, _ in SECTIONS],
+                    help="subset of sections (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="exit nonzero if any section errors or is empty "
+                         "(CI gate); roofline's empty dry-run is tolerated "
+                         "via its own self-check")
+    args = ap.parse_args()
+    want = set(args.sections)
     t0 = time.time()
+    failures = []
     for key, title, modname in SECTIONS:
         if want and key not in want:
             continue
-        mod = __import__(modname, fromlist=["run"])
         t1 = time.time()
         try:
+            mod = __import__(modname, fromlist=["run"])
             rows = mod.run(fast=True)
         except Exception as e:  # keep the harness going, report the failure
             print(f"\n## {title}\nERROR: {type(e).__name__}: {e}")
+            failures.append(f"{key}: {type(e).__name__}: {e}")
             continue
         print_rows(f"{title}  [{time.time() - t1:.0f}s]", rows)
+        # roofline legitimately yields no rows until a dry-run has been
+        # captured; its standalone --smoke self-check covers the math
+        if args.smoke and not rows and key != "roofline":
+            failures.append(f"{key}: produced no rows")
     print(f"\ntotal: {time.time() - t0:.0f}s")
+    if args.smoke and failures:
+        raise SystemExit("smoke failures:\n  " + "\n  ".join(failures))
 
 
 if __name__ == "__main__":

@@ -233,6 +233,13 @@ class ContactPlan:
                 t_cur = done
         return t_cur, passes
 
+    def window_events(self):
+        """Every GS window as flat event arrays ``(sat, starts, ends)`` —
+        the contact-window open/close sources of the discrete-event
+        timeline (``repro.sim.events.WorldTimeline``)."""
+        sat = np.repeat(np.arange(len(self._counts)), self._counts)
+        return sat, self._starts, self._ends
+
     # -- batched API (the scheduler's hot path) -------------------------
     def next_contacts(self, t):
         """Vectorized ``next_contact`` over all K satellites.

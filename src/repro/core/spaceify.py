@@ -80,7 +80,6 @@ the golden-parity baseline).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Dict, List, Optional
 
 import jax
@@ -98,6 +97,8 @@ from repro.core.quantize import (quantize_roundtrip,
                                  quantize_roundtrip_stacked, transmit_bytes)
 from repro.models.small import MODELS, accuracy
 from repro.sim.energy import EnergyConfig, EnergySim
+from repro.sim.events import (CLIENT_RETURN, ROUND_BARRIER, TRAIN_DONE,
+                              EventQueue, WorldTimeline)
 from repro.sim.faults import FaultConfig, FaultSim
 from repro.sim.hardware import FleetProfile, HardwareProfile
 
@@ -275,6 +276,9 @@ class SpaceifiedFL:
         self._t_down_k = self.fleet.tx_time(self.tx_bytes, "downlink")
         self._t_isl_k = self.fleet.tx_time(self.tx_bytes, "isl")
         self.records: List[RoundRecord] = []
+        # per-kind discrete-event counts of the last run() (repro.sim.
+        # events.EventStats); None until run() builds its timeline
+        self.event_stats = None
         self._tx_cache = self._tx_cache_src = None
         # battery SoC gating (FLConfig.energy); None => engine is bitwise
         # identical to the pre-energy path (nothing below ever consults it)
@@ -663,19 +667,42 @@ class SpaceifiedFL:
         return accuracy(self.apply_fn, self.global_params,
                         self.ds.x_test, self.ds.y_test)
 
-    # -- main loop -------------------------------------------------------
+    # -- main loop (discrete-event core) ---------------------------------
     def run(self, t0: float = 0.0, t_end: Optional[float] = None,
             max_rounds: Optional[int] = None):
+        """Event-driven main loop. ROUND_BARRIER decision events on a
+        deterministic :class:`~repro.sim.events.EventQueue` fire
+        ``run_round`` at exactly the clock points the retained per-round
+        loop used (``repro.core.round_loop_ref.run_sync_loop`` — the
+        golden baseline; ``tests/test_event_parity.py`` gates the
+        ``RoundRecord`` streams bitwise across the scenario matrix). The
+        world events between decision points — contact window open/close,
+        eclipse transitions, fault outages/recoveries, radiation resets —
+        resolve in one batched ``WorldTimeline.advance_through`` pass per
+        round instead of per-event Python stepping; battery-floor
+        crossings are noted by diffing the gating mask at each barrier.
+        ``self.event_stats`` holds the per-kind counts afterwards."""
         t_end = t_end if t_end is not None else self.plan.horizon_s
         max_rounds = max_rounds or self.cfg.max_rounds
-        t = t0
+        queue = EventQueue()
+        queue.push(t0, ROUND_BARRIER)
+        timeline = WorldTimeline.for_fl(self.plan, self.energy, self.faults)
+        self.event_stats = st = timeline.stats
         r = 0
-        while r < max_rounds and t < t_end:
-            rec = self.run_round(r, t)
+        while queue and r < max_rounds:
+            ev = queue.pop()
+            if ev.t >= t_end:
+                break
+            st.add(ROUND_BARRIER)
+            rec = self.run_round(r, ev.t)
             if rec is None:
                 break
             self.records.append(rec)
-            t = rec.t_end
+            timeline.advance_through(rec.t_end)
+            st.add(TRAIN_DONE, len(rec.participants))
+            if self.energy is not None:
+                timeline.note_eligibility(self.energy.eligible(), rec.t_end)
+            queue.push(rec.t_end, ROUND_BARRIER)
             r += 1
         return self.records
 
@@ -811,9 +838,48 @@ class FedBuffSat(SpaceifiedFL):
     continuously between ground contacts (near-zero idle, paper Fig. 5c);
     the server folds in updates with staleness discounting and completes a
     "round" when the buffer reaches D updates. The flush is one stacked
-    delta reduction (``apply_buffered_deltas``) over the whole buffer."""
+    delta reduction (``apply_buffered_deltas``) over the whole buffer.
+
+    This is the discrete-event core's first real consumer: the pending
+    deliveries live on a deterministic ``EventQueue`` of CLIENT_RETURN
+    events ordered ``(t, priority, sat, seq)`` — at a timestamp tie two
+    clients pop in satellite-index order, matching (and now guaranteeing
+    by contract) the retained heap's ``(t, k)`` tuple comparison. The
+    pre-event-engine loop is kept verbatim in
+    ``repro.core.round_loop_ref.run_fedbuff_loop`` as the golden parity
+    baseline."""
 
     name = "fedbuff"
+
+    # robust-estimator row count of the last buffer flush (read by the
+    # retained ref loop so both loops share the flush math)
+    _last_flush_clipped = 0
+
+    def _flush_buffer(self, buf) -> None:
+        """Fold a full buffer into the global model: one stacked delta
+        reduction, routed through the robust estimator when
+        ``FLConfig.aggregator`` is set. Shared by the event-driven
+        ``run()`` and ``round_loop_ref.run_fedbuff_loop`` — like
+        ``round_engine_ref`` shares ``weighted_average``, sharing the
+        flush keeps the bitwise-parity gate about the *clock*, not the
+        reduction tree. Sets ``self._last_flush_clipped``."""
+        stacked_new = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[b[0] for b in buf])
+        stacked_base = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[b[1] for b in buf])
+        wgts = jnp.asarray([b[2] for b in buf], jnp.float32)
+        n_clip = 0
+        if self.aggregator is not None:
+            # robust flush: the estimator sees the staleness-weighted
+            # deltas (zero reference), so a poisoned or corrupted
+            # buffered row is attenuated before it touches the global
+            self.global_params, n_clip = robust_apply_buffered_deltas(
+                self.global_params, stacked_new, stacked_base, wgts,
+                self.aggregator, mode=self.cfg.quant_kernel)
+        else:
+            self.global_params = apply_buffered_deltas(
+                self.global_params, stacked_new, stacked_base, wgts)
+        self._last_flush_clipped = n_clip
 
     def run(self, t0: float = 0.0, t_end: Optional[float] = None,
             max_rounds: Optional[int] = None):
@@ -823,8 +889,13 @@ class FedBuffSat(SpaceifiedFL):
         K = plan.constellation.n_sats
 
         ep_s = self.fleet.epoch_time_s            # (K,) per-satellite
+        # pending deliveries live on the deterministic event clock; world
+        # events (contacts, eclipses, outages, resets) resolve batched on
+        # the timeline between pops
+        queue = EventQueue()
+        timeline = WorldTimeline.for_fl(self.plan, self.energy, self.faults)
+        self.event_stats = st = timeline.stats
         # client states: params version picked up, pickup round, pickup time
-        heap = []
         client_params: Dict[int, object] = {}
         pickup_round: Dict[int, int] = {}
         epochs_of: Dict[int, int] = {}
@@ -864,7 +935,8 @@ class FedBuffSat(SpaceifiedFL):
                 recv_end, ret0 = float(recv_end_k[k]), float(ret_avail[k])
                 ep = int(np.clip((ret0 - recv_end) // ep_s[k], 1,
                                  cfg.max_local_epochs))
-                heapq.heappush(heap, (ret0 + float(self._t_down_k[k]), k))
+                queue.push(ret0 + float(self._t_down_k[k]),
+                           CLIENT_RETURN, key=k)
                 client_params[k] = self._tx_global()
                 pickup_round[k] = 0
                 epochs_of[k] = ep
@@ -893,7 +965,7 @@ class FedBuffSat(SpaceifiedFL):
                 t_done, d, rb, lost = self._walk_drops(k, nxt)
                 if lost:            # every return window drops: sits out
                     continue
-                heapq.heappush(heap, (t_done, k))
+                queue.push(t_done, CLIENT_RETURN, key=k)
                 client_params[k] = self._tx_global()
                 pickup_round[k] = 0
                 epochs_of[k] = ep
@@ -911,10 +983,13 @@ class FedBuffSat(SpaceifiedFL):
         fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
         corr_acc = 0
         comm_by: Dict[int, float] = {}
-        while heap and r < max_rounds:
-            t_ret, k = heapq.heappop(heap)
+        while queue and r < max_rounds:
+            ev = queue.pop()
+            t_ret, k = ev.t, ev.key
             if t_ret > t_end:
                 break
+            timeline.advance_through(t_ret)
+            st.add(CLIENT_RETURN)
             t_up, t_down = float(self._t_up_k[k]), float(self._t_down_k[k])
             train_s = epochs_of[k] * float(ep_s[k])
             # a radiation reset since pickup wiped the client's local
@@ -950,6 +1025,7 @@ class FedBuffSat(SpaceifiedFL):
                 train_acc += train_s
                 idle_acc += idle_of.get(k, 0.0)
                 n_ev += 1
+                st.add(TRAIN_DONE)
                 if self.faults is not None:
                     # the drop walk resolved at scheduling time: retry
                     # airtime joins the episode's comm accounting
@@ -975,7 +1051,9 @@ class FedBuffSat(SpaceifiedFL):
                         np.array([k]), np.array([train_s]),
                         np.array([t_down * (1 + n_drops)
                                   + deferred_up.pop(k, 0.0)]))
-                if not self.energy.eligible()[k]:
+                elig = self.energy.eligible()
+                timeline.note_eligibility(elig, t_ret)
+                if not elig[k]:
                     # drained below the floor: stand down until idle+solar
                     # recovers, then rejoin at the next contact after that.
                     # The deferred pickup's uplink is billed where it
@@ -1015,7 +1093,7 @@ class FedBuffSat(SpaceifiedFL):
                             np.array([t_up]))
                 ep = int(np.clip((nxt[0] - recv_end) // ep_s[k], 1,
                                  cfg.max_local_epochs))
-                heapq.heappush(heap, (ev_t, k))
+                queue.push(ev_t, CLIENT_RETURN, key=k)
                 client_params[k] = self._tx_global()
                 pickup_round[k] = r
                 epochs_of[k] = ep
@@ -1037,23 +1115,9 @@ class FedBuffSat(SpaceifiedFL):
                     dct.pop(k, None)
 
             if len(buf) >= cfg.buffer_size:
-                stacked_new = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                           *[b[0] for b in buf])
-                stacked_base = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                            *[b[1] for b in buf])
-                wgts = jnp.asarray([b[2] for b in buf], jnp.float32)
-                n_clip = 0
-                if self.aggregator is not None:
-                    # robust flush: the estimator sees the staleness-
-                    # weighted deltas (zero reference), so a poisoned or
-                    # corrupted buffered row is attenuated before it
-                    # touches the global
-                    self.global_params, n_clip = robust_apply_buffered_deltas(
-                        self.global_params, stacked_new, stacked_base, wgts,
-                        self.aggregator, mode=cfg.quant_kernel)
-                else:
-                    self.global_params = apply_buffered_deltas(
-                        self.global_params, stacked_new, stacked_base, wgts)
+                st.add(ROUND_BARRIER)
+                self._flush_buffer(buf)
+                n_clip = self._last_flush_clipped
                 buf = []
                 acc = self.evaluate() if r % cfg.eval_every == 0 else \
                     (self.records[-1].accuracy if self.records else 0.0)

@@ -1,4 +1,5 @@
 from repro.sim.energy import EnergyConfig, EnergySim, mixed_fleet
+from repro.sim.events import (Event, EventQueue, EventStats, WorldTimeline)
 from repro.sim.faults import EnergyDrainAttack, FaultConfig, FaultSim
 from repro.sim.hardware import FLYCUBE, SMALLSAT_SBAND, HardwareProfile, PowerModes
 
@@ -7,4 +8,5 @@ from repro.sim.hardware import FLYCUBE, SMALLSAT_SBAND, HardwareProfile, PowerMo
 
 __all__ = ["FLYCUBE", "SMALLSAT_SBAND", "HardwareProfile", "PowerModes",
            "EnergyConfig", "EnergySim", "mixed_fleet",
-           "FaultConfig", "FaultSim", "EnergyDrainAttack"]
+           "FaultConfig", "FaultSim", "EnergyDrainAttack",
+           "Event", "EventQueue", "EventStats", "WorldTimeline"]

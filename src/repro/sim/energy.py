@@ -385,6 +385,18 @@ class EnergySim:
             j += 1
 
     # -- queries ---------------------------------------------------------
+    def transition_events(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Every terminator crossing as flat event arrays
+        ``(sat, t, entering_eclipse)`` — the eclipse entry/exit sources of
+        the discrete-event timeline (``repro.sim.events.WorldTimeline``).
+        A satellite sunlit before its j-th transition enters eclipse at
+        it; states alternate from ``init_sun`` thereafter."""
+        rows = np.repeat(np.arange(self._K), self._counts)
+        cols = np.arange(self._ntrans) - np.repeat(self._off[:-1],
+                                                   self._counts)
+        entering = self._init_sun[rows] ^ ((cols % 2) == 1)
+        return rows, self._trans, entering
+
     def soc_frac(self) -> np.ndarray:
         """(K,) state of charge as a fraction of capacity."""
         return self.soc_wh / np.maximum(self.cap_wh, 1e-12)

@@ -327,6 +327,18 @@ class FaultSim:
         end = ep[np.arange(len(ks)), idx]
         return np.where(down, end, tq)
 
+    def outage_events(self):
+        """Every outage interval as flat event arrays
+        ``(sat, starts, ends)`` — the fault down/up sources of the
+        discrete-event timeline (``repro.sim.events.WorldTimeline``)."""
+        sat = np.repeat(np.arange(self.n_sats), self._out_counts)
+        return sat, self._out_start, self._out_end
+
+    def reset_events(self):
+        """Every radiation reset as flat event arrays ``(sat, t)``."""
+        sat = np.repeat(np.arange(self.n_sats), self._rst_counts)
+        return sat, self._rst_t
+
     def outage_fraction(self) -> np.ndarray:
         """(K,) fraction of [t0, horizon] each satellite spends down."""
         span = max(self.horizon_s - self.t0, 1e-12)

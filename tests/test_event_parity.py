@@ -1,0 +1,193 @@
+"""Differential parity of the event-driven simulator core against the
+retained pre-event-engine loops (``repro.core.round_loop_ref``, the
+``_ref.py`` golden-baseline convention): a seeded scenario matrix over
+(engine x fleet mix x energy on/off x faults on/off x quant_bits) runs
+every scenario on both cores and asserts bitwise-identical ``RoundRecord``
+streams and final global parameters. Tier-1 runs the corner scenarios;
+the full matrix runs under the registered ``slow`` marker (CI's slow-tier
+job: ``pytest -m slow tests/test_event_parity.py``). Plus the
+deterministic-queue unit contracts and the FedBuff same-instant tie
+regression."""
+import dataclasses
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.autoflsat import AutoFLSat
+from repro.core.contact_plan import ContactPlan, build_contact_plan
+from repro.core.round_loop_ref import run_loop
+from repro.core.spaceify import FedAvgSat, FedBuffSat, FedProxSat, FLConfig
+from repro.data.synthetic import make_federated_dataset
+from repro.orbit.constellation import WalkerStar
+from repro.sim.energy import EnergyConfig, mixed_fleet
+from repro.sim.events import (CLIENT_RETURN, ROUND_BARRIER, TRAIN_DONE,
+                              EventQueue, WorldTimeline)
+from repro.sim.faults import FaultConfig
+from repro.sim.hardware import HardwareProfile
+
+HW_FAST = HardwareProfile(name="fast", epoch_time_s=50.0,
+                          downlink_rate_bps=8e9, uplink_rate_bps=8e9,
+                          isl_rate_bps=8e9)
+HW_SLOW = dataclasses.replace(HW_FAST, name="slowradio", epoch_time_s=80.0,
+                              downlink_rate_bps=2e9, uplink_rate_bps=2e9,
+                              isl_rate_bps=2e9)
+
+ENGINES = {"fedavg": FedAvgSat, "fedprox": FedProxSat,
+           "fedbuff": FedBuffSat, "autoflsat": AutoFLSat}
+FLEETS = {"uniform": HW_FAST, "mixed": mixed_fleet((HW_FAST, HW_SLOW), 6)}
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_contact_plan(2, 3, 2, horizon_s=0.8 * 86400, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_dataset("femnist", 6, 32)
+
+
+def _cfg(energy, faults, quant_bits):
+    return FLConfig(
+        model="mlp", clients_per_round=4, epochs=2, batch_size=16,
+        max_rounds=4, max_local_epochs=6, buffer_size=3,
+        quant_bits=quant_bits,
+        energy=EnergyConfig(battery_capacity_wh=10.0) if energy else None,
+        faults=FaultConfig(mean_up_s=7200.0, mean_down_s=1800.0,
+                           drop_prob=0.2, seed=3) if faults else None)
+
+
+def _full_timings(recs):
+    """Every RoundRecord field, exact — the bitwise stream comparison."""
+    return [(r.round, r.t_start, r.t_end, r.duration_s, r.idle_s, r.comm_s,
+             r.train_s, float(r.accuracy), tuple(r.participants), r.epochs,
+             r.energy_wh, r.skipped_low_power,
+             tuple(sorted(r.comm_s_by_sat.items())), r.skipped_faulted,
+             r.dropped_contacts, r.retransmit_bytes, r.corrupted_updates,
+             r.clipped_updates) for r in recs]
+
+
+def _bitwise_equal(a, b):
+    return all((np.asarray(x) == np.asarray(y)).all()
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _assert_scenario_parity(plan, ds, engine, fleet, energy, faults,
+                            quant_bits):
+    cls, hw = ENGINES[engine], FLEETS[fleet]
+    event_driven = cls(plan, hw, ds, _cfg(energy, faults, quant_bits))
+    retained = cls(plan, hw, ds, _cfg(energy, faults, quant_bits))
+    recs_new = event_driven.run()
+    recs_ref = run_loop(retained)
+    assert recs_new, f"scenario produced no rounds: {engine}/{fleet}"
+    assert _full_timings(recs_new) == _full_timings(recs_ref)
+    assert _bitwise_equal(event_driven.global_params, retained.global_params)
+    # the event clock accounted the run: every round is a barrier (sync)
+    # or flush (fedbuff), and world events only appear when their
+    # subsystem is on
+    st = event_driven.event_stats
+    assert st.counts[ROUND_BARRIER] == len(recs_new)
+    assert st.batched_passes >= len(recs_new)
+    if any(r.train_s > 0 for r in recs_new):
+        assert st.counts.get(TRAIN_DONE, 0) > 0
+    if not energy:
+        assert "eclipse_entry" not in st.counts
+    if not faults:
+        assert "fault_down" not in st.counts
+
+
+# tier-1: the corner scenarios of the matrix, every engine
+@pytest.mark.parametrize("engine", sorted(ENGINES))
+@pytest.mark.parametrize("fleet,energy,faults,quant_bits", [
+    ("uniform", False, False, 0),
+    ("mixed", True, True, 8),
+])
+def test_event_core_matches_retained_loop(plan, ds, engine, fleet, energy,
+                                          faults, quant_bits):
+    _assert_scenario_parity(plan, ds, engine, fleet, energy, faults,
+                            quant_bits)
+
+
+# slow tier: the full (engine x fleet x energy x faults x quant) matrix
+@pytest.mark.slow
+@pytest.mark.parametrize("engine,fleet,energy,faults,quant_bits",
+                         list(itertools.product(sorted(ENGINES),
+                                                sorted(FLEETS),
+                                                [False, True],
+                                                [False, True], [0, 8])))
+def test_event_core_matches_retained_loop_full_matrix(
+        plan, ds, engine, fleet, energy, faults, quant_bits):
+    _assert_scenario_parity(plan, ds, engine, fleet, energy, faults,
+                            quant_bits)
+
+
+# ---------------------------------------------------------------------------
+# deterministic-queue unit contracts (no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+
+def test_push_into_past_asserts():
+    q = EventQueue()
+    q.push(10.0, ROUND_BARRIER)
+    q.pop()
+    q.push(5.0, TRAIN_DONE)
+    with pytest.raises(AssertionError):
+        q.pop()
+
+
+def test_equal_time_equal_kind_pops_by_satellite_index():
+    q = EventQueue()
+    for k in (3, 0, 2, 1):                 # adversarial insertion order
+        q.push(100.0, CLIENT_RETURN, key=k)
+    assert [q.pop().key for _ in range(4)] == [0, 1, 2, 3]
+
+
+def test_advance_through_is_idempotent_and_never_rewinds():
+    tl = WorldTimeline()
+    tl.add_source("fault_up", [1.0, 2.0, 3.0], [0, 0, 0])
+    assert tl.advance_through(2.0) == 2
+    assert tl.advance_through(2.0) == 0      # idempotent at equal t
+    assert tl.advance_through(1.0) == 0      # never rewinds
+    assert tl.advance_through(10.0) == 1
+    assert tl.stats.counts["fault_up"] == 3
+
+
+# ---------------------------------------------------------------------------
+# FedBuff same-instant ties (the determinism bugfix's regression test)
+# ---------------------------------------------------------------------------
+
+
+def _twin_plan(K=2, horizon=40_000.0, every=4000.0, dur=600.0):
+    """K satellites with *identical* periodic GS windows, so every client
+    returns at exactly the same contact instant."""
+    c = WalkerStar(1, K)
+    wins = [[(float(s), float(s + dur), 0)
+             for s in np.arange(0.0, horizon - dur, every)]
+            for _ in range(K)]
+    return ContactPlan(constellation=c, horizon_s=horizon, sat_windows=wins,
+                       cluster_of=np.zeros(K, np.int32), pair_windows={})
+
+
+def test_fedbuff_same_instant_returns_pop_in_satellite_order(ds):
+    """Two clients with identical contact schedules deliver at the same
+    timestamp every time. The buffer (and therefore the stacked flush and
+    the key-stream consumption) must fold them in satellite-index order —
+    the EventQueue's (t, priority, key, seq) contract — bitwise-matching
+    the retained heap's (t, k) tuple ordering."""
+    plan = _twin_plan()
+    ds2 = make_federated_dataset("femnist", 2, 32)
+    cfg = dict(model="mlp", clients_per_round=2, epochs=1, batch_size=16,
+               max_rounds=3, max_local_epochs=4, buffer_size=2)
+    a = FedBuffSat(plan, HW_FAST, ds2, FLConfig(**cfg))
+    b = FedBuffSat(plan, HW_FAST, ds2, FLConfig(**cfg))
+    recs_new, recs_ref = a.run(), run_loop(b)
+    assert recs_new and _full_timings(recs_new) == _full_timings(recs_ref)
+    # ties really happened: both satellites billed in the same round
+    assert set(recs_new[0].comm_s_by_sat) == {0, 1}
+    # the flush stacking order is the satellite order => bitwise globals
+    assert _bitwise_equal(a.global_params, b.global_params)
+    assert a.event_stats.counts[CLIENT_RETURN] >= 2 * len(recs_new)

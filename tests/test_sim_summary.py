@@ -1,0 +1,69 @@
+"""SimResult.summary() counter aggregation over a hand-built record list:
+the fault/energy/robustness counters (skipped_faulted, dropped_contacts,
+retransmit_bytes, corrupted_updates, clipped_updates, skipped_low_power,
+energy_wh) must be exact sums of the per-round fields, and the scalar
+metrics must follow from the same records — no engine in the loop, so a
+summary regression cannot hide behind simulation changes."""
+import math
+
+from repro.core.spaceify import RoundRecord
+from repro.sim.flystack import SimConfig, SimResult
+
+
+def _rec(r, t0, t1, acc, **kw):
+    return RoundRecord(r, t0, t1, t1 - t0, kw.pop("idle_s", 100.0),
+                       30.0, 200.0, acc, [0, 1], **kw)
+
+
+def _result(records):
+    return SimResult(SimConfig(algorithm="fedavg", n_clusters=2,
+                               sats_per_cluster=3, n_ground_stations=2),
+                     records)
+
+
+def test_summary_sums_fault_and_energy_counters():
+    recs = [
+        _rec(0, 0.0, 3600.0, 0.10, energy_wh=1.5, skipped_low_power=2,
+             skipped_faulted=1, dropped_contacts=3, retransmit_bytes=4096.0,
+             corrupted_updates=1, clipped_updates=0),
+        _rec(1, 3600.0, 9000.0, 0.30, energy_wh=0.25, skipped_low_power=0,
+             skipped_faulted=2, dropped_contacts=0, retransmit_bytes=512.5,
+             corrupted_updates=2, clipped_updates=3),
+        _rec(2, 9000.0, 10800.0, 0.25),     # defaults: all counters zero
+    ]
+    s = _result(recs).summary()
+    assert s["rounds"] == 3
+    assert s["skipped_low_power"] == 2
+    assert s["skipped_faulted"] == 3
+    assert s["dropped_contacts"] == 3
+    assert s["retransmit_bytes"] == round(4096.0 + 512.5, 1)
+    assert s["corrupted_updates"] == 3
+    assert s["clipped_updates"] == 3
+    assert s["energy_wh"] == round(1.75, 3)
+    assert s["final_acc"] == 0.25 and s["best_acc"] == 0.30
+    assert s["total_h"] == round(10800.0 / 3600, 3)
+    assert s["mean_round_h"] == round((3600 + 5400 + 1800) / 3 / 3600, 4)
+    assert s["mean_idle_h"] == round(100.0 / 3600, 4)
+    assert s["algorithm"] == "fedavg" and s["clusters"] == 2
+    assert s["sats_per_cluster"] == 3 and s["ground_stations"] == 2
+
+
+def test_summary_counters_default_to_zero_without_subsystems():
+    s = _result([_rec(0, 0.0, 1800.0, 0.2)]).summary()
+    for key in ("skipped_low_power", "skipped_faulted", "dropped_contacts",
+                "corrupted_updates", "clipped_updates"):
+        assert s[key] == 0
+    assert s["retransmit_bytes"] == 0.0 and s["energy_wh"] == 0.0
+
+
+def test_summary_of_empty_run_is_well_defined():
+    s = _result([]).summary()
+    assert s["rounds"] == 0 and s["final_acc"] == 0.0
+    assert s["skipped_faulted"] == 0 and s["retransmit_bytes"] == 0.0
+    assert math.isnan(s["mean_round_h"]) and math.isnan(s["total_h"])
+
+
+def test_time_to_accuracy_reads_round_end_times():
+    res = _result([_rec(0, 0.0, 3600.0, 0.10), _rec(1, 3600.0, 7200.0, 0.5)])
+    assert res.time_to_accuracy_h(0.4) == 7200.0 / 3600
+    assert res.time_to_accuracy_h(0.9) is None

@@ -24,7 +24,8 @@ from repro.core.aggregation import segment_mean, segment_weighted_mean
 from repro.core.client import local_sgd_clients
 from repro.core.contact_plan import ContactPlan
 from repro.core.quantize import quantize_roundtrip_stacked
-from repro.core.spaceify import FLConfig, RoundRecord, SpaceifiedFL
+from repro.core.spaceify import (_WALK_ATTEMPT_CAP, FLConfig, RoundRecord,
+                                 SpaceifiedFL)
 
 
 @dataclasses.dataclass
@@ -36,6 +37,11 @@ class InterSLSchedule:
     # fault accounting (zeros when FLConfig.faults is off)
     dropped_contacts: int = 0          # ISL hop attempts lost to drops
     retransmit_bytes: float = 0.0      # re-billed bytes of retried hops
+    # graceful-degradation accounting (zeros at wait-for-all defaults)
+    retries_exhausted: int = 0         # pair hops abandoned: retry budget out
+    pairs_skipped: int = 0             # pair exchanges skipped (deadline or
+                                       # exhaustion) instead of failing the
+                                       # round
 
 
 def _fleet_mean(a) -> float:
@@ -86,17 +92,19 @@ class AutoFLSat(SpaceifiedFL):
         tx = {(ci, cj):
               self.tx_bytes * 8.0 / min(rate_c[ci], rate_c[cj]) * 2.0
               for ci in range(C) for cj in range(ci + 1, C)}  # bidirectional
-        drops, rebill = 0, 0.0
-        if self.faults is None:
+        drops, rebill, rex, skipped = 0, 0.0, 0, 0
+        if self.faults is None and not self._deadline_on:
             chained = self.plan.chain_pair_transfers(t, tx)
             if chained is None:
                 return None
             t_cur, passes = chained
         else:
-            chained = self._chain_pair_transfers_faulted(t, tx)
+            t_deadline = t + self.cfg.round_deadline_s \
+                if self._deadline_on else np.inf
+            chained = self._chain_pair_transfers_faulted(t, tx, t_deadline)
             if chained is None:
                 return None
-            t_cur, passes, drops, rebill = chained
+            t_cur, passes, drops, rebill, rex, skipped = chained
         if self.epochs_mode == "auto":
             # epochs from first & last comms record (Algorithm 2); the
             # budget must fit the slowest ML unit so tier 1 stays in sync
@@ -105,9 +113,11 @@ class AutoFLSat(SpaceifiedFL):
             e = min(e, self.cfg.max_local_epochs)
         else:
             e = self.cfg.epochs
-        return InterSLSchedule(t, t_cur, e, passes, drops, rebill)
+        return InterSLSchedule(t, t_cur, e, passes, drops, rebill,
+                               rex, skipped)
 
-    def _chain_pair_transfers_faulted(self, t: float, tx: dict):
+    def _chain_pair_transfers_faulted(self, t: float, tx: dict,
+                                      t_deadline: float = np.inf):
         """Fault-aware pair chain: each ISL hop's transmission attempt
         may drop independently (``faults.pair_dropped``, keyed by the
         attempt time, so every retry is a fresh seeded draw). A dropped
@@ -116,33 +126,74 @@ class AutoFLSat(SpaceifiedFL):
         is the fate of the whole exchange attempt, so the retry
         re-acquires at the next pass rather than microseconds later in
         the same one. Returns (t_complete, passes, dropped_hops,
-        retransmit_bytes) or None when a hop runs out of windows."""
+        retransmit_bytes, retries_exhausted, pairs_skipped) or None when
+        a hop runs out of windows in wait-for-all mode.
+
+        Graceful degradation (dead at the defaults, so the wait-for-all
+        fault path is bitwise the PR 7 chain): with ``cfg.max_retries``
+        set, each pair hop gets the same bounded budget + window-level
+        exponential backoff as the downlink walk, and an exhausted hop
+        *skips* that pair's exchange (counted, the chain continues)
+        instead of burning retries forever. With a finite round deadline
+        a pair whose exchange cannot complete by ``t_deadline`` — or
+        whose windows run out mid-walk — is likewise skipped rather than
+        failing the whole round: the storm-struck pair degrades to a
+        missing exchange, the rest of the hierarchy keeps syncing. Also
+        serves the faults-None + deadline-on combination (drop draws
+        skipped, deadline skipping active)."""
         C = self.n_clusters
         t_cur = t
         passes: List[Tuple[int, int, float]] = []
-        drops, rebill = 0, 0.0
+        drops, rebill, rex, skipped = 0, 0.0, 0, 0
+        bounded = self.cfg.max_retries is not None
+        budget = self.cfg.max_retries if bounded else _WALK_ATTEMPT_CAP
+        deadline_on = bool(np.isfinite(t_deadline))
         for ci in range(C):
             for cj in range(ci + 1, C):
                 dur = tx[(ci, cj)]
+                attempts = 0
                 while True:
                     done = self.plan.transmit_over_pair(ci, cj, t_cur, dur)
                     if done is None:
+                        if deadline_on:
+                            skipped += 1    # degrade: drop this exchange
+                            break
                         return None
-                    if not self.faults.pair_dropped(ci, cj, t_cur):
+                    if deadline_on and done > t_deadline:
+                        skipped += 1        # cannot land before the close
+                        break
+                    if self.faults is None or \
+                            not self.faults.pair_dropped(ci, cj, t_cur):
                         passes.append((ci, cj, t_cur))
                         t_cur = done
                         break
                     drops += 1
+                    attempts += 1
                     rebill += 2.0 * self.tx_bytes   # both directions lost
+                    if attempts > budget:
+                        rex += 1
+                        skipped += 1
+                        t_cur = done    # the failed attempt spent airtime
+                        break
                     # airtime was spent through ``done``; skip the rest of
                     # the pass the failed attempt ended in and retry at
                     # the next pair window (strictly later, so the walk
                     # always terminates and every retry keys a new draw)
                     w = self.plan.next_pair_window(ci, cj, done)
+                    if bounded:     # window-level exponential backoff
+                        for _ in range((1 << min(attempts - 1, 16)) - 1):
+                            if w is None:
+                                break
+                            w = self.plan.next_pair_window(ci, cj,
+                                                           float(w[1]))
                     if w is None:
+                        if deadline_on:
+                            skipped += 1
+                            t_cur = done
+                            break
                         return None
                     t_cur = float(w[1]) if w[0] <= done else float(w[0])
-        return t_cur, passes, drops, rebill
+        return t_cur, passes, drops, rebill, rex, skipped
 
     # ------------------------------------------------------------------
     def run_round(self, r, t):
@@ -220,6 +271,31 @@ class AutoFLSat(SpaceifiedFL):
                     trained, kk, kk, float(done_k[kk]), ref_c)
                 n_corr += int(bad)
 
+        # deadline / quorum close on the tier-1 barrier: with a finite
+        # round deadline, members whose train + intra-cluster exchange
+        # lands after the close are stragglers — carried as stale deltas
+        # (late_policy "carry") or discarded — instead of stretching the
+        # synchronous barrier through a storm. Dead when the deadline is
+        # inf, so the default barrier stays bitwise-identical.
+        n_exp, n_strag = 0, 0
+        t_close = None
+        if self._deadline_on:
+            elig = np.ones(K, bool) if ok is None else np.asarray(ok, bool)
+            t_close, on_time, expired = self._close_round(t, done_k, elig)
+            if expired:
+                n_exp = 1
+                late_members = np.nonzero(elig & ~on_time)[0]
+                n_strag = int(len(late_members))
+                if cfg.late_policy == "carry":
+                    for kk in late_members:
+                        ref_c = jax.tree.map(
+                            lambda b, _kk=int(kk): b[_kk // spc], bcast)
+                        self._carry_straggler(trained, int(kk), ref_c,
+                                              float(done_k[kk]), r, int(kk))
+                ok = on_time if ok is None else (ok & on_time)
+            if sched.pairs_skipped:
+                n_exp = 1   # tier-2 exchanges were cut short by the close
+
         # tier 2: all-to-all exchange -> constellation-wide model (the
         # exchanged cluster models cross ISLs quantized when quant_bits>0)
         if ok is None:
@@ -252,12 +328,24 @@ class AutoFLSat(SpaceifiedFL):
         # the round it sits out; the tier-2 pair schedule stays the
         # conservative whole-cluster bottleneck, since the orbital
         # exchange slots are fixed before SoC is known).
-        if ok is not None and ok.any():
+        if t_close is not None:
+            # deadline mode: the barrier ends at the close, not at the
+            # slowest straggler (equal to the participant max when the
+            # deadline never bound)
+            t_train_done = float(t_close)
+        elif ok is not None and ok.any():
             t_train_done = float(np.max(done_k[ok]))
         else:
             t_train_done = float(np.max(done_k))
         t_round_end = max(sched.t_complete, t_train_done)
         idle = max(t_round_end - t_train_done, 0.0)
+        # fold stale straggler deltas whose delivery landed by this
+        # round's end (FedBuff-style staleness discount), then refresh
+        # the per-cluster broadcast copies of the patched global model
+        if self._carried and self._fold_carried(t_round_end, r):
+            self.cluster_params = jax.tree.map(
+                lambda g: jnp.broadcast_to(g, (C,) + g.shape),
+                self.global_params)
         K = plan.constellation.n_sats
         participants = list(range(K))
         wh, skipped = 0.0, 0
@@ -293,4 +381,8 @@ class AutoFLSat(SpaceifiedFL):
                            dropped_contacts=sched.dropped_contacts,
                            retransmit_bytes=sched.retransmit_bytes,
                            corrupted_updates=n_corr,
-                           clipped_updates=n_clip)
+                           clipped_updates=n_clip,
+                           deadline_expired=n_exp,
+                           stragglers_carried=n_strag,
+                           retries_exhausted=sched.retries_exhausted,
+                           storm_events=self._storms_in(t, t_round_end))

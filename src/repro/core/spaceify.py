@@ -137,6 +137,21 @@ class RoundRecord:
     # rows the robust aggregator attenuated/rejected this round
     corrupted_updates: int = 0
     clipped_updates: int = 0
+    # graceful-degradation accounting (deadline/quorum rounds, bounded
+    # retries, correlated storms; all zeros at the wait-for-all defaults)
+    deadline_expired: int = 0      # 1 when the round closed at its deadline
+                                   # with stragglers still in flight
+    stragglers_carried: int = 0    # deliveries past the close: carried to a
+                                   # later round as stale deltas under
+                                   # late_policy="carry", dropped under
+                                   # "discard" (the counter records the cut
+                                   # either way)
+    retries_exhausted: int = 0     # transmissions abandoned because the
+                                   # retry budget ran out (never silent:
+                                   # with max_retries=None a hard safety cap
+                                   # still counts here instead of walking
+                                   # the horizon)
+    storm_events: int = 0          # correlated storms breaking this round
 
 
 @dataclasses.dataclass
@@ -201,6 +216,25 @@ class FLConfig:
         disables every fault path and is bitwise-identical to the
         fault-free engine.
 
+    Deadline / quorum rounds (graceful degradation)
+        ``round_deadline_s``: with the default ``inf`` every synchronous
+        round waits for its slowest participant (the PR 8 wait-for-all
+        semantics, bitwise-unchanged). Finite: the round closes at
+        ``t + round_deadline_s`` — stretched, if necessary, to the
+        ``quorum``-th delivery, so a storm can delay a round but never
+        starve the aggregate below ``quorum`` updates. Deliveries after
+        the close are *stragglers*: zero weight this round, and under
+        ``late_policy="carry"`` their updates are folded into a later
+        round as FedBuff-style stale deltas (staleness-discounted by
+        rounds elapsed); ``"discard"`` drops them outright. Applies to
+        FedAvg/FedProx rounds and both AutoFLSat barrier tiers;
+        FedBuffSat is already asynchronous and ignores the deadline.
+        ``max_retries``: caps every drop-retry walk (sync downlink and
+        AutoFLSat ISL chain) at that many retries with window-level
+        exponential backoff; exhaustion is recorded in
+        ``RoundRecord.retries_exhausted``. ``None`` keeps unbounded
+        retries (modulo a hard safety cap — see ``_walk_drops``).
+
     Robust aggregation (this PR)
         ``aggregator``: ``None`` (default) keeps the exact legacy
         weighted-mean server — bitwise-identical to the pre-robust
@@ -246,10 +280,29 @@ class FLConfig:
     faults: Optional[FaultConfig] = None    # fault injection (off = None)
     aggregator: Optional[object] = None     # None => legacy weighted mean;
                                             # name | RobustAggregator instance
+    round_deadline_s: float = float("inf")  # inf => wait-for-all rounds
+    quorum: int = 1                # min deliveries before a deadline close
+    late_policy: str = "carry"     # stragglers: "carry" (stale deltas) |
+                                   # "discard"
+    max_retries: Optional[int] = None   # drop-retry budget (None=unbounded)
 
 
 def _model_tx_bytes(params, cfg: FLConfig) -> float:
     return transmit_bytes(params, cfg.quant_bits)
+
+
+#: Hard safety cap on any drop-retry walk when ``max_retries`` is None.
+#: ``drop_prob`` near 1 composed with outages used to walk the whole
+#: horizon silently; a walk that somehow drops this many consecutive
+#: passes is abandoned and *counted* (``retries_exhausted``), not hidden.
+#: Unreachable under any realistic drop rate (0.9^1000 ~ 1e-46), so the
+#: unbounded path stays bitwise-identical to the PR 7/8 engines.
+_WALK_ATTEMPT_CAP = 1000
+
+# ``lost`` codes of the drop-retry walks (truthy compatibility: the
+# retained ref loops only test ``if lost:``)
+_LOST_WINDOWS = 1      # horizon ran out of usable windows mid-walk
+_LOST_RETRIES = 2      # the retry budget was exhausted
 
 
 class SpaceifiedFL:
@@ -297,6 +350,24 @@ class SpaceifiedFL:
         # Byzantine-robust server (FLConfig.aggregator); None => the exact
         # legacy weighted-mean path (guaranteed bitwise-identical)
         self.aggregator = make_robust_aggregator(cfg.aggregator)
+        # deadline/quorum round semantics (graceful degradation). With the
+        # inf default nothing below consults the deadline machinery and
+        # rounds stay bitwise wait-for-all.
+        if not cfg.round_deadline_s > 0.0:
+            raise ValueError("FLConfig.round_deadline_s must be > 0 "
+                             "(inf disables the deadline)")
+        if cfg.quorum < 1:
+            raise ValueError("FLConfig.quorum must be >= 1")
+        if cfg.late_policy not in ("carry", "discard"):
+            raise ValueError("FLConfig.late_policy must be 'carry' or "
+                             f"'discard', got {cfg.late_policy!r}")
+        if cfg.max_retries is not None and cfg.max_retries < 0:
+            raise ValueError("FLConfig.max_retries must be >= 0 or None")
+        self._deadline_on = bool(np.isfinite(cfg.round_deadline_s))
+        # stragglers carried past a deadline close, folded into a later
+        # round as stale deltas: (row_params, base_params, t_deliver,
+        # round_picked, sat)
+        self._carried: List[tuple] = []
         if cfg.energy is not None:
             # shared-fleet invariant: unless EnergyConfig.fleet overrides,
             # the battery bills the same per-satellite hardware that the
@@ -485,20 +556,41 @@ class SpaceifiedFL:
         turn one dropped pass into millions of fresh draws on a fast
         link, and the walk keys a new RNG per draw). Returns ``(t_done,
         drops, rebill_bytes, lost)`` — ``drops`` counts lost passes,
-        ``rebill_bytes`` bills every attempt beyond the first,
-        ``lost=True`` when the horizon runs out of windows before a
-        delivery."""
+        ``rebill_bytes`` bills every attempt beyond the first, and
+        ``lost`` is 0 (delivered), ``_LOST_WINDOWS`` (the horizon ran out
+        of usable windows) or ``_LOST_RETRIES`` (the attempt budget ran
+        out: ``cfg.max_retries`` retries when set, else the
+        ``_WALK_ATTEMPT_CAP`` safety cap — a storm pinning ``drop_prob``
+        near 1 must surface as counted exhaustion, not as a silent walk
+        to the horizon). Both lost codes are truthy, so the retained ref
+        loops' ``if lost:`` checks are unchanged.
+
+        With ``max_retries`` set, retry ``j`` backs off window-level
+        exponentially: it skips ``2**(j-1) - 1`` additional usable passes
+        before re-keying the radio (shift clamped at 16), modelling a
+        link-layer that stops hammering a stormy channel. Unbounded mode
+        performs no backoff — the PR 7 walk, bitwise."""
         t_down = float(self._t_down_k[k])
+        bounded = self.cfg.max_retries is not None
+        budget = self.cfg.max_retries if bounded else _WALK_ATTEMPT_CAP
         w, drops = w_first, 0
         while self.faults.contact_dropped(k, float(w[0])):
             drops += 1
+            if drops > budget:
+                return (float(w[0]) + t_down, drops,
+                        max(drops - 1, 0) * self.tx_bytes, _LOST_RETRIES)
             nxt = self._next_available_contact(
                 k, max(float(w[0]) + t_down, float(w[1])))
+            if bounded:
+                for _ in range((1 << min(drops - 1, 16)) - 1):
+                    if nxt is None:
+                        break
+                    nxt = self._next_available_contact(k, float(nxt[1]))
             if nxt is None:
                 return (float(w[0]) + t_down, drops,
-                        max(drops - 1, 0) * self.tx_bytes, True)
+                        max(drops - 1, 0) * self.tx_bytes, _LOST_WINDOWS)
             w = nxt
-        return float(w[0]) + t_down, drops, drops * self.tx_bytes, False
+        return float(w[0]) + t_down, drops, drops * self.tx_bytes, 0
 
     def _faulted_return_legs(self, ks, recv_end, train_end, ends, comms):
         """Re-resolve the selected cohort's return downlinks under faults
@@ -516,11 +608,12 @@ class SpaceifiedFL:
         contributes aggregation weight 0.
 
         Returns ``(delivered (m,) 0/1 floats, ends, comms, n_faulted,
-        drops, rebill_bytes)`` with ``ends``/``comms`` updated copies."""
+        drops, rebill_bytes, n_retries_exhausted)`` with
+        ``ends``/``comms`` updated copies."""
         m = len(ks)
         delivered = np.ones(m)
         ends, comms = ends.copy(), comms.copy()
-        n_faulted, drops_total, rebill_total = 0, 0, 0.0
+        n_faulted, drops_total, rebill_total, n_rex = 0, 0, 0.0, 0
         check_resets = self.faults.cfg.has_resets
         for i in range(m):
             k = int(ks[i])
@@ -533,6 +626,8 @@ class SpaceifiedFL:
             t_done, d, rb, lost = self._walk_drops(k, w0)
             if lost:
                 delivered[i], n_faulted = 0.0, n_faulted + 1
+                if lost == _LOST_RETRIES:
+                    n_rex += 1
                 ends[i], comms[i] = t_done, t_up + d * float(
                     self._t_down_k[k])
                 drops_total += d
@@ -547,7 +642,8 @@ class SpaceifiedFL:
             comms[i] += d * float(self._t_down_k[k])
             drops_total += d
             rebill_total += rb
-        return delivered, ends, comms, n_faulted, drops_total, rebill_total
+        return (delivered, ends, comms, n_faulted, drops_total, rebill_total,
+                n_rex)
 
     def _selection_faulted(self, proj) -> int:
         """Candidates masked *only* by an outage at selection time."""
@@ -555,6 +651,83 @@ class SpaceifiedFL:
             return 0
         return int(np.sum(proj["orbit_valid"] & proj["energy_ok"]
                           & ~proj["fault_ok"]))
+
+    # -- deadline/quorum round close (graceful degradation) ---------------
+    def _close_round(self, t: float, ends, delivered):
+        """Round-close policy over the participants' delivery times.
+
+        Returns ``(t_close, on_time, expired)``. With the deadline off
+        (``round_deadline_s=inf``) ``t_close`` is the natural
+        wait-for-all end — the latest *delivered* end, or the latest end
+        when nothing delivered — with ``on_time == delivered`` and
+        ``expired=False``: bitwise-identical to the PR 8 engines. With a
+        finite deadline the round closes at
+        ``max(t + round_deadline_s, quorum-th delivery)``: the deadline
+        cuts the slow tail, but never before ``cfg.quorum`` deliveries
+        have landed, so a storm can delay a round yet never starve the
+        aggregate below the quorum. A delivery after ``t_close`` is a
+        straggler (``on_time`` False); if every delivery makes the
+        deadline the close is the natural end and nothing expired."""
+        delivered = np.asarray(delivered, bool)
+        natural = float(ends[delivered].max() if delivered.any()
+                        else ends.max())
+        if not self._deadline_on:
+            return natural, delivered, False
+        t_deadline = t + self.cfg.round_deadline_s
+        if natural <= t_deadline or not delivered.any():
+            return natural, delivered, False
+        times = np.sort(ends[delivered])
+        q = min(self.cfg.quorum, len(times))
+        t_close = max(t_deadline, float(times[q - 1]))
+        if t_close >= natural:
+            return natural, delivered, False
+        return t_close, delivered & (ends <= t_close), True
+
+    def _carry_straggler(self, trained, i: int, base, t_deliver: float,
+                         r: int, sat: int) -> None:
+        """Bank row ``i`` of a stacked trained cohort as a straggler:
+        its update (and the broadcast ``base`` it trained from) is folded
+        into a later round once the clock passes its delivery time."""
+        row = jax.tree.map(lambda p: p[i], trained)
+        self._carried.append((row, base, float(t_deliver), int(r), int(sat)))
+
+    def _fold_carried(self, t_close: float, r: int) -> int:
+        """Fold every carried straggler whose delivery time has passed
+        into the global model as FedBuff-style stale deltas:
+        ``global += mean_j w_j * (row_j - base_j)`` with the staleness
+        discount ``w_j = (1 + r - r_orig)**(-staleness_exponent)`` —
+        exactly the async engine's discount, applied at the first round
+        close at/after the straggler's delivery. Routed through the
+        robust estimator when one is configured. Returns the number of
+        stragglers folded (the rest stay banked)."""
+        if not self._carried:
+            return 0
+        due = [c for c in self._carried if c[2] <= t_close]
+        if not due:
+            return 0
+        self._carried = [c for c in self._carried if c[2] > t_close]
+        stacked_new = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[c[0] for c in due])
+        stacked_base = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                    *[c[1] for c in due])
+        wgts = jnp.asarray(
+            [(1.0 + max(r - c[3], 0)) ** (-self.cfg.staleness_exponent)
+             for c in due], jnp.float32)
+        if self.aggregator is not None:
+            self.global_params, _ = robust_apply_buffered_deltas(
+                self.global_params, stacked_new, stacked_base, wgts,
+                self.aggregator, mode=self.cfg.quant_kernel)
+        else:
+            self.global_params = apply_buffered_deltas(
+                self.global_params, stacked_new, stacked_base, wgts)
+        return len(due)
+
+    def _storms_in(self, t_from: float, t_to: float) -> int:
+        """Correlated storms breaking in ``(t_from, t_to]`` (0 when
+        faults or storms are off) — ``RoundRecord.storm_events``."""
+        if self.faults is None:
+            return 0
+        return self.faults.storms_between(t_from, t_to)
 
     # -- silent payload faults (SEU corruption + poisoning) --------------
     def _corrupt_row(self, params, i: int, k: int, t_deliver: float,
@@ -733,24 +906,39 @@ class FedAvgSat(SpaceifiedFL):
             + np.maximum(proj["ret_avail"][ks] - proj["train_end"][ks], 0.0)
         comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = proj["train_end"][ks] - proj["recv_end"][ks]
-        n_flt, drops, rebill, n_corr, n_clip = 0, 0, 0.0, 0, 0
-        if self.faults is None:
-            t_round_end = float(ends.max())
-        else:
-            delivered, ends, comms, n_flt, drops, rebill = \
+        n_flt, drops, rebill, n_corr, n_clip, n_rex = 0, 0, 0.0, 0, 0, 0
+        delivered = np.ones(len(sel))
+        if self.faults is not None:
+            delivered, ends, comms, n_flt, drops, rebill, n_rex = \
                 self._faulted_return_legs(ks, proj["recv_end"][ks],
                                           proj["train_end"][ks], ends, comms)
             n_k[:len(sel)] *= delivered    # lost/wiped updates: weight 0
             n_flt += self._selection_faulted(proj)
-            got = delivered > 0            # the server waits for deliveries
-            t_round_end = float(ends[got].max() if got.any() else ends.max())
             if self.faults.cfg.has_payload_faults:
                 # corrupt/poison delivered rows at their delivery times —
                 # the bytes were billed above; only the weights went bad
                 trained, n_corr = self._apply_payload_faults(
                     trained, sel, delivered, ends)
+        # the server waits for deliveries — until the deadline/quorum
+        # close cuts the slow tail (wait-for-all, bitwise, at inf)
+        t_round_end, on_time, expired = self._close_round(
+            t, ends, delivered > 0)
+        n_exp, n_strag = 0, 0
+        if expired:
+            n_exp = 1
+            late = np.nonzero((delivered > 0) & ~on_time)[0]
+            n_strag = len(late)
+            if cfg.late_policy == "carry" and n_strag:
+                base_ref = self._tx_global()   # the broadcast they trained on
+                for i in late:
+                    self._carry_straggler(trained, int(i), base_ref,
+                                          float(ends[int(i)]), r,
+                                          int(sel[int(i)]))
+            n_k[:len(sel)] *= on_time.astype(np.float64)
         if float(n_k.sum()) > 0.0:         # always true when faults are off
             self.global_params, n_clip = self._aggregate(trained, n_k)
+        if self._carried:
+            self._fold_carried(t_round_end, r)
         wh, skipped = self._round_energy(proj, ks, trains, comms, t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
             (self.records[-1].accuracy if self.records else 0.0)
@@ -762,7 +950,10 @@ class FedAvgSat(SpaceifiedFL):
                            comm_s_by_sat=dict(zip(sel, comms.tolist())),
                            skipped_faulted=n_flt, dropped_contacts=drops,
                            retransmit_bytes=rebill, corrupted_updates=n_corr,
-                           clipped_updates=n_clip)
+                           clipped_updates=n_clip, deadline_expired=n_exp,
+                           stragglers_carried=n_strag,
+                           retries_exhausted=n_rex,
+                           storm_events=self._storms_in(t, t_round_end))
 
 
 class FedProxSat(SpaceifiedFL):
@@ -800,24 +991,37 @@ class FedProxSat(SpaceifiedFL):
             + np.maximum(projf["ret_avail"][ks] - train_end, 0.0)
         comms = self._t_up_k[ks] + self._t_down_k[ks]
         trains = train_end - recv_end
-        n_flt, drops, rebill, n_corr, n_clip = 0, 0, 0.0, 0, 0
-        if self.faults is None:
-            t_round_end = float(ends.max())
-        else:
+        n_flt, drops, rebill, n_corr, n_clip, n_rex = 0, 0, 0.0, 0, 0, 0
+        delivered = np.ones(len(sel))
+        if self.faults is not None:
             # epoch budgets keep the fault-free projection (the client
             # cannot foresee faults); only the return leg is re-resolved
-            delivered, ends, comms, n_flt, drops, rebill = \
+            delivered, ends, comms, n_flt, drops, rebill, n_rex = \
                 self._faulted_return_legs(ks, recv_end, train_end,
                                           ends, comms)
             n_k[:len(sel)] *= delivered
             n_flt += self._selection_faulted(projf)
-            got = delivered > 0
-            t_round_end = float(ends[got].max() if got.any() else ends.max())
             if self.faults.cfg.has_payload_faults:
                 trained, n_corr = self._apply_payload_faults(
                     trained, sel, delivered, ends)
+        t_round_end, on_time, expired = self._close_round(
+            t, ends, delivered > 0)
+        n_exp, n_strag = 0, 0
+        if expired:
+            n_exp = 1
+            late = np.nonzero((delivered > 0) & ~on_time)[0]
+            n_strag = len(late)
+            if cfg.late_policy == "carry" and n_strag:
+                base_ref = self._tx_global()
+                for i in late:
+                    self._carry_straggler(trained, int(i), base_ref,
+                                          float(ends[int(i)]), r,
+                                          int(sel[int(i)]))
+            n_k[:len(sel)] *= on_time.astype(np.float64)
         if float(n_k.sum()) > 0.0:
             self.global_params, n_clip = self._aggregate(trained, n_k)
+        if self._carried:
+            self._fold_carried(t_round_end, r)
         wh, skipped = self._round_energy(projf, ks, trains, comms,
                                          t_round_end)
         acc = self.evaluate() if r % cfg.eval_every == 0 else \
@@ -830,7 +1034,10 @@ class FedProxSat(SpaceifiedFL):
                            comm_s_by_sat=dict(zip(sel, comms.tolist())),
                            skipped_faulted=n_flt, dropped_contacts=drops,
                            retransmit_bytes=rebill, corrupted_updates=n_corr,
-                           clipped_updates=n_clip)
+                           clipped_updates=n_clip, deadline_expired=n_exp,
+                           stragglers_carried=n_strag,
+                           retries_exhausted=n_rex,
+                           storm_events=self._storms_in(t, t_round_end))
 
 
 class FedBuffSat(SpaceifiedFL):
@@ -917,6 +1124,7 @@ class FedBuffSat(SpaceifiedFL):
         # instead of t0 — satellites that never recover get an inf query,
         # which next_contacts reports as invalid.
         tq = np.full(K, t0)
+        rex_seed = 0        # retry-budget exhaustions during seeding
         if self.energy is not None:
             self.energy.advance_to(t0)
             drained = np.nonzero(~self.energy.eligible())[0]
@@ -964,6 +1172,7 @@ class FedBuffSat(SpaceifiedFL):
                                  cfg.max_local_epochs))
                 t_done, d, rb, lost = self._walk_drops(k, nxt)
                 if lost:            # every return window drops: sits out
+                    rex_seed += int(lost == _LOST_RETRIES)
                     continue
                 queue.push(t_done, CLIENT_RETURN, key=k)
                 client_params[k] = self._tx_global()
@@ -981,7 +1190,7 @@ class FedBuffSat(SpaceifiedFL):
         idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
         energy_acc, skip_acc = 0.0, 0
         fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
-        corr_acc = 0
+        corr_acc, rex_acc = 0, rex_seed
         comm_by: Dict[int, float] = {}
         while queue and r < max_rounds:
             ev = queue.pop()
@@ -1075,6 +1284,7 @@ class FedBuffSat(SpaceifiedFL):
                 if self.faults is not None:
                     t_done2, d2, rb2, lost = self._walk_drops(k, nxt)
                     if lost:        # every remaining return window drops
+                        rex_acc += int(lost == _LOST_RETRIES)
                         nxt = None
                     else:
                         ev_t = t_done2
@@ -1132,12 +1342,14 @@ class FedBuffSat(SpaceifiedFL):
                     energy_wh=energy_acc, skipped_low_power=skip_acc,
                     comm_s_by_sat=comm_by, skipped_faulted=fault_acc,
                     dropped_contacts=drop_acc, retransmit_bytes=rebill_acc,
-                    corrupted_updates=corr_acc, clipped_updates=n_clip))
+                    corrupted_updates=corr_acc, clipped_updates=n_clip,
+                    retries_exhausted=rex_acc,
+                    storm_events=self._storms_in(t_round_start, t_ret)))
                 t_round_start = t_ret
                 idle_acc = comm_acc = train_acc = 0.0
                 energy_acc, skip_acc = 0.0, 0
                 fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
-                corr_acc = 0
+                corr_acc, rex_acc = 0, 0
                 comm_by = {}
                 n_ev = 0
                 r += 1

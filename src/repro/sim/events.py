@@ -58,6 +58,8 @@ ECLIPSE_EXIT = "eclipse_exit"        # terminator crossing into sunlight
 FAULT_DOWN = "fault_down"            # outage interval start
 FAULT_UP = "fault_up"                # outage interval end (recovery)
 RADIATION_RESET = "radiation_reset"  # SEU payload reboot
+STORM_BEGIN = "storm_begin"          # correlated storm hits a cluster
+STORM_END = "storm_end"              # storm footprint clears
 BATTERY_FLOOR = "battery_floor"      # SoC crossed below the gating floor
 BATTERY_RECOVER = "battery_recover"  # SoC recovered above the floor
 # ... then decision events (the FL consumers).
@@ -73,13 +75,14 @@ PRIORITY: Dict[str, int] = {
     CONTACT_OPEN: 0, CONTACT_CLOSE: 1,
     ECLIPSE_ENTRY: 2, ECLIPSE_EXIT: 3,
     FAULT_DOWN: 4, FAULT_UP: 5, RADIATION_RESET: 6,
-    BATTERY_FLOOR: 7, BATTERY_RECOVER: 8,
-    TRAIN_DONE: 9, CLIENT_RETURN: 10, ROUND_BARRIER: 11,
+    STORM_BEGIN: 7, STORM_END: 8,
+    BATTERY_FLOOR: 9, BATTERY_RECOVER: 10,
+    TRAIN_DONE: 11, CLIENT_RETURN: 12, ROUND_BARRIER: 13,
 }
 
 WORLD_KINDS: Tuple[str, ...] = (
     CONTACT_OPEN, CONTACT_CLOSE, ECLIPSE_ENTRY, ECLIPSE_EXIT,
-    FAULT_DOWN, FAULT_UP, RADIATION_RESET)
+    FAULT_DOWN, FAULT_UP, RADIATION_RESET, STORM_BEGIN, STORM_END)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,9 +108,17 @@ class EventQueue:
     are totally ordered by ``(t, priority, key)`` with the insertion
     sequence number ``seq`` only ever consulted between events that are
     fully identical on the first three fields (then insertion order
-    wins — documented, and exercised by the property suite). Pop times
-    are non-decreasing by construction; :meth:`pop` also asserts it, so
-    a consumer that pushes an event into its own past fails loudly.
+    wins — documented, and exercised by the property suite).
+
+    **Past-push contract**: pushing an event strictly before the last
+    popped timestamp raises ``ValueError`` *at the push* — failing at
+    the producer, where the bug is, not at some later pop. Pushing
+    *exactly at* the current clock is allowed and well-defined: the
+    event is ordered by ``(priority, key, seq)`` against everything
+    else at that instant (a zero-duration follow-up is legitimate
+    scheduling; rewinding the clock is not). Pop times are therefore
+    non-decreasing by construction; :meth:`pop` keeps an assert as a
+    backstop against heap corruption.
     """
 
     def __init__(self):
@@ -130,6 +141,12 @@ class EventQueue:
         return ev
 
     def push_event(self, ev: Event) -> None:
+        if ev.t < self.t_last:
+            raise ValueError(
+                f"event {ev.kind!r} (key={ev.key}) scheduled at t={ev.t} "
+                f"but the clock has already popped t={self.t_last}: "
+                "events may be pushed at or after the current clock, "
+                "never into the past")
         heapq.heappush(self._heap,
                        (ev.t, ev.priority, ev.key, self._seq, ev))
         self._seq += 1
@@ -240,6 +257,11 @@ class WorldTimeline:
             tl.add_source(FAULT_UP, ends, sat)
             sat, t = faults.reset_events()
             tl.add_source(RADIATION_RESET, t, sat)
+            if getattr(faults, "has_storms", False):
+                # storm events are keyed by *cluster*, not satellite
+                cluster, t_begin, t_end = faults.storm_timeline_events()
+                tl.add_source(STORM_BEGIN, t_begin, cluster)
+                tl.add_source(STORM_END, t_end, cluster)
         return tl
 
     # -- bulk accounting -------------------------------------------------

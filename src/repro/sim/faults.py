@@ -40,6 +40,14 @@ query in vectorized form:
     corruption *shape* (sign flip, scale blow-up, or large-magnitude
     noise — see :meth:`FaultSim.corruption_at`), so a delivery's fate
     and damage are one pure function of the fault seed.
+  * **Correlated storms** (:class:`StormConfig`) — regional events that
+    hit one orbital plane / cluster at once instead of drawing i.i.d.:
+    each storm knocks a seeded subset of its footprint into full outages
+    (expanded into the same CSR arrays, merged per satellite) and raises
+    the per-contact drop and SEU-corruption thresholds for the footprint
+    while active — the counter-based draw keys never change, only the
+    thresholds, so the storm-free stream is untouched. Storms surface on
+    the event timeline as ``STORM_BEGIN``/``STORM_END``.
   * **Energy-drain attack** (:class:`EnergyDrainAttack`) — the IWQoS'23
     adversarial scenario: an attacker-chosen contact/activity schedule
     that forces victim radios (or payload compute) to key, sized to
@@ -67,12 +75,75 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 # sub-stream tags under FaultConfig.seed (SeedSequence entropy words):
-# one seed, disjoint named streams, order-independent draws.
+# one seed, disjoint named streams, order-independent draws. The full
+# stream map lives in docs/ARCHITECTURE.md ("RNG streams").
 _STREAM_OUTAGE = 1
 _STREAM_RESET = 2
 _STREAM_DROP = 3
 _STREAM_PAIR_DROP = 4
 _STREAM_CORRUPT = 5
+_STREAM_STORM = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class StormEvent:
+    """One correlated regional fault event: for
+    ``[t_start, t_start + duration_s)`` every satellite whose plane /
+    cluster (``ContactPlan.cluster_of``) equals ``cluster`` sits inside
+    the storm footprint at the given ``severity`` in (0, 1]."""
+    t_start: float
+    duration_s: float
+    cluster: int
+    severity: float = 1.0
+
+    @property
+    def t_end(self) -> float:
+        return self.t_start + self.duration_s
+
+
+@dataclasses.dataclass(frozen=True)
+class StormConfig:
+    """Correlated storm faults (``FaultConfig.storms``).
+
+    PR 6's faults are i.i.d. per satellite; a solar/geomagnetic storm is
+    not — it hits a whole orbital plane at once. A storm is an interval
+    event over one cluster footprint; while it is active each footprint
+    satellite sees (a) a seeded chance of a full outage for the storm
+    interval, expanded into the same CSR outage arrays the engines
+    already query, (b) elevated per-contact drop odds, and (c) elevated
+    SEU-corruption odds — all scaled by the event's severity.
+
+    rate_per_day
+        Poisson arrival rate of *drawn* storms over the horizon (whole
+        constellation; each drawn storm picks a uniform cluster, an
+        exponential duration of mean ``mean_duration_s`` and a severity
+        ~ Uniform[``severity_range``]). 0 disables drawing — scripted
+        ``events`` still apply.
+    outage_prob
+        P(a footprint satellite is knocked into a full outage spanning
+        the storm interval) x severity, drawn once per (storm, sat)
+        from the ``_STREAM_STORM`` stream.
+    drop_prob / corrupt_prob
+        Added (x severity, clamped to 1) on top of the base
+        ``FaultConfig.drop_prob`` / ``corrupt_prob`` for footprint
+        satellites while the storm is active. The underlying Bernoulli
+        draws keep their counter-based keys — a storm only moves the
+        threshold, so the no-storm draw stream is untouched.
+    events
+        Scripted :class:`StormEvent` tuple, merged with the drawn ones
+        (the degradation benchmark scripts a plane-wide storm this way).
+    """
+    rate_per_day: float = 0.0
+    mean_duration_s: float = 10_800.0
+    severity_range: Tuple[float, float] = (0.5, 1.0)
+    outage_prob: float = 1.0
+    drop_prob: float = 0.5
+    corrupt_prob: float = 0.0
+    events: Tuple[StormEvent, ...] = ()
+
+    @property
+    def any_events(self) -> bool:
+        return self.rate_per_day > 0.0 or len(self.events) > 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,6 +254,11 @@ class FaultConfig:
     poison
         Optional :class:`PoisonAttack`: the listed satellites replace
         every update they deliver with a scaled malicious delta.
+    storms
+        Optional :class:`StormConfig`: correlated regional events that
+        expand into extra outages and elevated drop/corrupt rates for
+        the affected cluster while active. ``None`` (default) keeps
+        every fault draw bitwise-identical to the storm-free engines.
     """
     mean_up_s: float = float("inf")
     mean_down_s: float = 1800.0
@@ -192,14 +268,27 @@ class FaultConfig:
     seed: Optional[int] = None
     attack: Optional[EnergyDrainAttack] = None
     poison: Optional[PoisonAttack] = None
+    storms: Optional["StormConfig"] = None
 
     @property
     def seed_value(self) -> int:
         return 0 if self.seed is None else int(self.seed)
 
     @property
-    def has_outages(self) -> bool:
+    def has_base_outages(self) -> bool:
+        """The i.i.d. per-satellite outage process is on."""
         return np.isfinite(self.mean_up_s) and self.mean_down_s > 0.0
+
+    @property
+    def has_storms(self) -> bool:
+        return self.storms is not None and self.storms.any_events
+
+    @property
+    def has_outages(self) -> bool:
+        """Satellites can be down: i.i.d. outages or storm knockouts.
+        Gates the outage-aware contact walks in the engines."""
+        return self.has_base_outages or (
+            self.has_storms and self.storms.outage_prob > 0.0)
 
     @property
     def has_resets(self) -> bool:
@@ -211,7 +300,8 @@ class FaultConfig:
         or a poison attack. The engines skip the payload pass entirely
         otherwise, keeping the zero-rate path bitwise-identical."""
         return self.corrupt_prob > 0.0 or (
-            self.poison is not None and len(self.poison.satellites) > 0)
+            self.poison is not None and len(self.poison.satellites) > 0) or (
+            self.has_storms and self.storms.corrupt_prob > 0.0)
 
 
 def _sat_rng(seed: int, stream: int, k: int) -> np.random.Generator:
@@ -232,15 +322,20 @@ class FaultSim:
     """
 
     def __init__(self, cfg: FaultConfig, n_sats: int, horizon_s: float,
-                 t0: float = 0.0):
+                 t0: float = 0.0, cluster_of=None):
         self.cfg = cfg
         self.n_sats = K = int(n_sats)
         self.horizon_s = float(horizon_s)
         self.t0 = float(t0)
+        if cluster_of is None:
+            self.cluster_of = np.zeros(K, np.int64)
+        else:
+            self.cluster_of = np.asarray(cluster_of, np.int64)
+        self.n_clusters = int(self.cluster_of.max()) + 1 if K else 1
         seed = cfg.seed_value
         starts, ends = [], []
         counts = np.zeros(K, np.int64)
-        if cfg.has_outages:
+        if cfg.has_base_outages:
             for k in range(K):
                 rng = _sat_rng(seed, _STREAM_OUTAGE, k)
                 t = self.t0 + rng.exponential(cfg.mean_up_s)
@@ -250,8 +345,22 @@ class FaultSim:
                     ends.append(t + d)        # may extend past the horizon
                     counts[k] += 1
                     t = t + d + rng.exponential(cfg.mean_up_s)
-        self._build_outage_arrays(np.asarray(starts, np.float64),
-                                  np.asarray(ends, np.float64), counts)
+        starts = np.asarray(starts, np.float64)
+        ends = np.asarray(ends, np.float64)
+        self._storms: list = []
+        if cfg.has_storms:
+            self._draw_storms()
+            s_sat, s_start, s_end = self._storm_outage_intervals()
+            if len(s_sat):
+                # merge storm knockouts into the base CSR outage arrays;
+                # only this path re-sorts, so storms=None leaves the base
+                # arrays byte-identical to the pre-storm construction
+                sat = np.concatenate([np.repeat(np.arange(K), counts), s_sat])
+                starts, ends, counts = self._merge_sat_intervals(
+                    sat, np.concatenate([starts, s_start]),
+                    np.concatenate([ends, s_end]), K)
+        self._build_outage_arrays(starts, ends, counts)
+        self._build_storm_arrays()
         resets = []
         rcounts = np.zeros(K, np.int64)
         if cfg.has_resets:
@@ -267,7 +376,104 @@ class FaultSim:
 
     @classmethod
     def for_plan(cls, plan, cfg: FaultConfig) -> "FaultSim":
-        return cls(cfg, plan.constellation.n_sats, plan.horizon_s)
+        return cls(cfg, plan.constellation.n_sats, plan.horizon_s,
+                   cluster_of=plan.cluster_of)
+
+    # -- correlated storms ----------------------------------------------
+    def _draw_storms(self) -> None:
+        """Scripted events + Poisson-drawn events, time-sorted. Drawn
+        storms come from the dedicated ``_STREAM_STORM`` stream so
+        enabling them never perturbs the outage/reset/drop draws."""
+        sc = self.cfg.storms
+        evs = [StormEvent(float(e.t_start), float(e.duration_s),
+                          int(e.cluster), float(e.severity))
+               for e in sc.events]
+        if sc.rate_per_day > 0.0:
+            rng = np.random.default_rng(
+                [self.cfg.seed_value, _STREAM_STORM])
+            mean_gap = 86_400.0 / sc.rate_per_day
+            lo, hi = sc.severity_range
+            t = self.t0 + rng.exponential(mean_gap)
+            while t < self.horizon_s:
+                dur = rng.exponential(sc.mean_duration_s)
+                cluster = int(rng.integers(self.n_clusters))
+                sev = float(rng.uniform(lo, hi))
+                evs.append(StormEvent(t, dur, cluster, sev))
+                t = t + dur + rng.exponential(mean_gap)
+        self._storms = sorted(evs, key=lambda e: (e.t_start, e.cluster))
+
+    def _storm_outage_intervals(self):
+        """Per-(storm, satellite) knockout draws: each footprint
+        satellite is knocked into a full outage spanning the storm with
+        probability ``outage_prob * severity``, keyed
+        ``(seed, _STREAM_STORM, sat, storm_index)`` so the fate is a
+        pure function of the fault seed."""
+        sc = self.cfg.storms
+        sats, starts, ends = [], [], []
+        if sc.outage_prob <= 0.0:
+            return (np.asarray(sats, np.int64), np.asarray(starts),
+                    np.asarray(ends))
+        seed = self.cfg.seed_value
+        for i, ev in enumerate(self._storms):
+            p = min(1.0, sc.outage_prob * ev.severity)
+            for k in np.nonzero(self.cluster_of == ev.cluster)[0]:
+                rng = np.random.default_rng(
+                    [seed, _STREAM_STORM, int(k), i])
+                if rng.random() < p:
+                    sats.append(int(k))
+                    starts.append(ev.t_start)
+                    ends.append(ev.t_end)
+        return (np.asarray(sats, np.int64),
+                np.asarray(starts, np.float64), np.asarray(ends, np.float64))
+
+    @staticmethod
+    def _merge_sat_intervals(sats, starts, ends, n_sats):
+        """Merge possibly-overlapping per-satellite intervals into the
+        sorted non-overlapping CSR form ``available``/``next_up``
+        require (their bisection assumes per-satellite starts AND ends
+        are monotone). Touching intervals (``end == next start``) merge
+        too — ``[s, e) ∪ [e, e2) = [s, e2)`` under the half-open outage
+        semantics. Returns flat ``(starts, ends, counts)``."""
+        order = np.lexsort((starts, sats))
+        sats, starts, ends = sats[order], starts[order], ends[order]
+        out_s, out_e = [], []
+        counts = np.zeros(n_sats, np.int64)
+        cur_sat, cur_s, cur_e, have = -1, 0.0, 0.0, False
+        for k, s, e in zip(sats, starts, ends):
+            if have and k == cur_sat and s <= cur_e:
+                cur_e = max(cur_e, e)
+                continue
+            if have:
+                out_s.append(cur_s)
+                out_e.append(cur_e)
+                counts[cur_sat] += 1
+            cur_sat, cur_s, cur_e, have = int(k), float(s), float(e), True
+        if have:
+            out_s.append(cur_s)
+            out_e.append(cur_e)
+            counts[cur_sat] += 1
+        return (np.asarray(out_s, np.float64), np.asarray(out_e, np.float64),
+                counts)
+
+    def _build_storm_arrays(self):
+        """Cluster-level storm interval arrays for the severity queries
+        (padded like the CSR views: start=inf rows are never active)."""
+        C = self.n_clusters
+        n_by_c = np.zeros(C, np.int64)
+        for ev in self._storms:
+            n_by_c[ev.cluster] += 1
+        smax = max(int(n_by_c.max()) if C else 0, 1)
+        self._stm_start = np.full((C, smax), np.inf)
+        self._stm_end = np.full((C, smax), np.inf)
+        self._stm_sev = np.zeros((C, smax))
+        col = np.zeros(C, np.int64)
+        for ev in self._storms:
+            c, j = ev.cluster, col[ev.cluster]
+            self._stm_start[c, j] = ev.t_start
+            self._stm_end[c, j] = ev.t_end
+            self._stm_sev[c, j] = ev.severity
+            col[c] += 1
+        self._storm_t0 = np.sort([ev.t_start for ev in self._storms])
 
     # -- packed CSR layout ----------------------------------------------
     def _build_outage_arrays(self, starts, ends, counts):
@@ -368,26 +574,112 @@ class FaultSim:
         return bool(self.resets_between(np.array([k]), np.array([t_from]),
                                         np.array([t_to]))[0] > 0)
 
+    # -- storm queries ---------------------------------------------------
+    @property
+    def has_storms(self) -> bool:
+        return bool(self._storms)
+
+    def _cluster_storm_sev(self, c: int, t: float) -> float:
+        """Max severity of a storm active over cluster ``c`` at ``t``
+        (0.0 = clear skies). A storm spans ``[t_start, t_end)``."""
+        if not self._storms:
+            return 0.0
+        sp, ep, sv = self._stm_start[c], self._stm_end[c], self._stm_sev[c]
+        act = (sp <= t) & (t < ep)
+        return float(np.max(np.where(act, sv, 0.0)))
+
+    def storm_severity(self, ks, t) -> np.ndarray:
+        """Batched: max active-storm severity over ``ks[i]``'s cluster
+        at ``t[i]`` (0 where no storm is active)."""
+        ks = np.asarray(ks, np.int64)
+        if not self._storms:
+            return np.zeros(ks.shape)
+        tq = np.broadcast_to(np.asarray(t, np.float64), ks.shape)
+        cs = self.cluster_of[ks]
+        sp, ep, sv = self._stm_start[cs], self._stm_end[cs], self._stm_sev[cs]
+        act = (sp <= tq[:, None]) & (tq[:, None] < ep)
+        return np.max(np.where(act, sv, 0.0), axis=1)
+
+    def storms_between(self, t_from: float, t_to: float) -> int:
+        """Count of storms *beginning* in ``(t_from, t_to]`` — the
+        per-round ``RoundRecord.storm_events`` counter (each storm is
+        attributed to exactly one round, the one during which it broke)."""
+        if not self._storms:
+            return 0
+        return int(np.searchsorted(self._storm_t0, t_to, side="right")
+                   - np.searchsorted(self._storm_t0, t_from, side="right"))
+
+    def storm_timeline_events(self):
+        """Every storm as flat event arrays ``(cluster, t_begin, t_end)``
+        — the ``STORM_BEGIN``/``STORM_END`` sources of the discrete-event
+        timeline (``repro.sim.events.WorldTimeline``), keyed by cluster."""
+        cl = np.asarray([ev.cluster for ev in self._storms], np.int64)
+        tb = np.asarray([ev.t_start for ev in self._storms], np.float64)
+        te = np.asarray([ev.t_end for ev in self._storms], np.float64)
+        return cl, tb, te
+
+    def drop_prob_at(self, k: int, t: float) -> float:
+        """Effective per-contact drop probability for satellite ``k`` at
+        ``t``: the base rate plus ``severity * storms.drop_prob`` while a
+        storm covers its cluster (clamped to 1)."""
+        p = self.cfg.drop_prob
+        sc = self.cfg.storms
+        if sc is not None and self._storms and sc.drop_prob > 0.0:
+            sev = self._cluster_storm_sev(int(self.cluster_of[k]), float(t))
+            if sev > 0.0:
+                p = min(1.0, p + sc.drop_prob * sev)
+        return p
+
+    def pair_drop_prob_at(self, ci: int, cj: int, t: float) -> float:
+        """Effective ISL pair-hop drop probability: boosted when a storm
+        covers either endpoint cluster (the worse of the two)."""
+        p = self.cfg.drop_prob
+        sc = self.cfg.storms
+        if sc is not None and self._storms and sc.drop_prob > 0.0:
+            sev = max(self._cluster_storm_sev(int(ci), float(t)),
+                      self._cluster_storm_sev(int(cj), float(t)))
+            if sev > 0.0:
+                p = min(1.0, p + sc.drop_prob * sev)
+        return p
+
+    def corrupt_prob_at(self, k: int, t: float) -> float:
+        """Effective SEU-corruption probability at delivery time (storm
+        boost, same clamp as the drop boost)."""
+        p = self.cfg.corrupt_prob
+        sc = self.cfg.storms
+        if sc is not None and self._storms and sc.corrupt_prob > 0.0:
+            sev = self._cluster_storm_sev(int(self.cluster_of[k]), float(t))
+            if sev > 0.0:
+                p = min(1.0, p + sc.corrupt_prob * sev)
+        return p
+
     # -- per-contact drop draws (counter-based, order-independent) ------
-    def _bernoulli(self, stream: int, a: int, b: int, t: float) -> bool:
-        if self.cfg.drop_prob <= 0.0:
+    def _bernoulli(self, stream: int, a: int, b: int, t: float,
+                   prob: float) -> bool:
+        if prob <= 0.0:
             return False
         # quantize the contact time to ms so float noise cannot re-key a
         # draw; distinct attempts are at distinct windows => fresh draws
         key = [self.cfg.seed_value, stream, int(a), int(b),
                int(round(float(t) * 1e3))]
-        return bool(np.random.default_rng(key).random() < self.cfg.drop_prob)
+        return bool(np.random.default_rng(key).random() < prob)
 
     def contact_dropped(self, k: int, t_contact: float) -> bool:
         """Seeded fate of the transmission attempt of satellite ``k`` at
         the contact starting ``t_contact`` — a pure function of
-        (seed, k, t_contact)."""
-        return self._bernoulli(_STREAM_DROP, k, 0, t_contact)
+        (seed, k, t_contact). A storm over ``k``'s cluster raises the
+        threshold of the *same* draw (the key never changes), so the
+        storm-free stream is untouched and a given contact can only flip
+        toward dropping when a storm is added."""
+        return self._bernoulli(_STREAM_DROP, k, 0, t_contact,
+                               self.drop_prob_at(k, t_contact))
 
     def pair_dropped(self, ci: int, cj: int, t_attempt: float) -> bool:
         """Seeded fate of the AutoFLSat ISL pair hop (ci, cj) attempted
-        at ``t_attempt`` (independent per hop, per attempt)."""
-        return self._bernoulli(_STREAM_PAIR_DROP, ci, cj, t_attempt)
+        at ``t_attempt`` (independent per hop, per attempt; storm boost
+        from either endpoint cluster)."""
+        return self._bernoulli(_STREAM_PAIR_DROP, ci, cj, t_attempt,
+                               self.pair_drop_prob_at(ci, cj, t_attempt))
 
     # -- silent payload corruption (counter-based, order-independent) ----
     def corruption_at(self, k: int, t_deliver: float):
@@ -408,12 +700,13 @@ class FaultSim:
             (``noise_seed`` seeds the noise tensor draw so the damage
             itself is reproducible).
         """
-        if self.cfg.corrupt_prob <= 0.0:
+        prob = self.corrupt_prob_at(k, t_deliver)
+        if prob <= 0.0:
             return None
         key = [self.cfg.seed_value, _STREAM_CORRUPT, int(k), 0,
                int(round(float(t_deliver) * 1e3))]
         rng = np.random.default_rng(key)
-        if rng.random() >= self.cfg.corrupt_prob:
+        if rng.random() >= prob:
             return None
         mode = ("sign_flip", "scale", "noise")[int(rng.integers(3))]
         if mode == "sign_flip":

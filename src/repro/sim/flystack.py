@@ -134,6 +134,26 @@ class SimResult:
         rounds (0 under the plain weighted mean)."""
         return int(sum(r.clipped_updates for r in self.records))
 
+    def total_deadline_expired(self) -> int:
+        """Rounds whose barrier was closed by the deadline/quorum rule
+        before every delivery landed (0 at the wait-for-all default)."""
+        return int(sum(r.deadline_expired for r in self.records))
+
+    def total_stragglers_carried(self) -> int:
+        """Deliveries that missed their round close and were carried as
+        stale FedBuff-style deltas (or discarded), summed over rounds."""
+        return int(sum(r.stragglers_carried for r in self.records))
+
+    def total_retries_exhausted(self) -> int:
+        """Drop-retry walks abandoned at the attempt budget, summed over
+        rounds (0 while every walk delivers within budget)."""
+        return int(sum(r.retries_exhausted for r in self.records))
+
+    def total_storm_events(self) -> int:
+        """Correlated storm onsets that began during a round, summed
+        over rounds (0 with ``storms=None``)."""
+        return int(sum(r.storm_events for r in self.records))
+
     def summary(self) -> dict:
         return {
             "algorithm": self.config.algorithm,
@@ -153,6 +173,10 @@ class SimResult:
             "retransmit_bytes": round(self.total_retransmit_bytes(), 1),
             "corrupted_updates": self.total_corrupted_updates(),
             "clipped_updates": self.total_clipped_updates(),
+            "deadline_expired": self.total_deadline_expired(),
+            "stragglers_carried": self.total_stragglers_carried(),
+            "retries_exhausted": self.total_retries_exhausted(),
+            "storm_events": self.total_storm_events(),
         }
 
 

@@ -67,7 +67,8 @@ def _full_timings(recs):
              r.energy_wh, r.skipped_low_power,
              tuple(sorted(r.comm_s_by_sat.items())), r.skipped_faulted,
              r.dropped_contacts, r.retransmit_bytes, r.corrupted_updates,
-             r.clipped_updates) for r in recs]
+             r.clipped_updates, r.deadline_expired, r.stragglers_carried,
+             r.retries_exhausted, r.storm_events) for r in recs]
 
 
 def _bitwise_equal(a, b):
@@ -130,13 +131,31 @@ def test_event_core_matches_retained_loop_full_matrix(
 # ---------------------------------------------------------------------------
 
 
-def test_push_into_past_asserts():
+def test_push_into_past_raises_at_push():
+    """The past-push contract: once the clock has popped t, scheduling an
+    event strictly before t is a ValueError *at push time* (not a deferred
+    assert at pop), so the offending caller is in the traceback."""
     q = EventQueue()
     q.push(10.0, ROUND_BARRIER)
     q.pop()
-    q.push(5.0, TRAIN_DONE)
-    with pytest.raises(AssertionError):
-        q.pop()
+    with pytest.raises(ValueError, match="into the past"):
+        q.push(5.0, TRAIN_DONE)
+    # the queue is unchanged by the rejected push
+    assert len(q) == 0
+
+
+def test_push_at_current_clock_is_allowed():
+    """Events AT the current clock are legal (zero-duration follow-ups:
+    a flush scheduled at the delivery instant) and order by (priority,
+    key, seq) among themselves."""
+    q = EventQueue()
+    q.push(10.0, ROUND_BARRIER)
+    assert q.pop().t == 10.0
+    q.push(10.0, CLIENT_RETURN, key=1)     # t == t_last: fine
+    q.push(10.0, TRAIN_DONE, key=0)        # higher-priority kind, same t
+    first, second = q.pop(), q.pop()
+    assert (first.kind, second.kind) == (TRAIN_DONE, CLIENT_RETURN)
+    assert first.t == second.t == 10.0
 
 
 def test_equal_time_equal_kind_pops_by_satellite_index():
@@ -153,6 +172,18 @@ def test_advance_through_is_idempotent_and_never_rewinds():
     assert tl.advance_through(2.0) == 0      # idempotent at equal t
     assert tl.advance_through(1.0) == 0      # never rewinds
     assert tl.advance_through(10.0) == 1
+    assert tl.stats.counts["fault_up"] == 3
+
+
+def test_advance_through_at_exact_event_timestamp_is_inclusive():
+    """``advance_through(t)`` drains events with ``ev.t <= t`` — an event
+    scheduled exactly at the barrier is consumed by that barrier, and the
+    immediately following advance finds nothing left at the same t."""
+    tl = WorldTimeline()
+    tl.add_source("fault_up", [5.0, 5.0, 7.0], [0, 1, 0])
+    assert tl.advance_through(5.0) == 2      # both t==5 events, inclusive
+    assert tl.advance_through(5.0) == 0      # drained, idempotent
+    assert tl.advance_through(7.0) == 1
     assert tl.stats.counts["fault_up"] == 3
 
 

@@ -28,7 +28,8 @@ def test_summary_sums_fault_and_energy_counters():
              corrupted_updates=1, clipped_updates=0),
         _rec(1, 3600.0, 9000.0, 0.30, energy_wh=0.25, skipped_low_power=0,
              skipped_faulted=2, dropped_contacts=0, retransmit_bytes=512.5,
-             corrupted_updates=2, clipped_updates=3),
+             corrupted_updates=2, clipped_updates=3, deadline_expired=1,
+             stragglers_carried=2, retries_exhausted=1, storm_events=2),
         _rec(2, 9000.0, 10800.0, 0.25),     # defaults: all counters zero
     ]
     s = _result(recs).summary()
@@ -39,6 +40,10 @@ def test_summary_sums_fault_and_energy_counters():
     assert s["retransmit_bytes"] == round(4096.0 + 512.5, 1)
     assert s["corrupted_updates"] == 3
     assert s["clipped_updates"] == 3
+    assert s["deadline_expired"] == 1
+    assert s["stragglers_carried"] == 2
+    assert s["retries_exhausted"] == 1
+    assert s["storm_events"] == 2
     assert s["energy_wh"] == round(1.75, 3)
     assert s["final_acc"] == 0.25 and s["best_acc"] == 0.30
     assert s["total_h"] == round(10800.0 / 3600, 3)

@@ -34,6 +34,8 @@ SECTIONS = [
      "benchmarks.autoflsat_table1"),
     ("autoflsat_sweep", "Tables 6/7: AutoFLSat cluster/epoch sweep",
      "benchmarks.autoflsat_sweep"),
+    ("policy", "Selection-policy sweep: storm + energy scenarios",
+     "benchmarks.policy_sweep"),
     ("roofline", "Roofline: per (arch x shape) terms from the dry-run",
      "benchmarks.roofline"),
 ]

@@ -217,7 +217,23 @@ class AutoFLSat(SpaceifiedFL):
         # by radiation before their train+exchange completes, carry zero
         # weight in the cluster mean. ``ok is None`` == everyone in.
         K = C * spc
-        train_time_k = self.fleet.train_time(sched.epochs)   # (K,)
+        # per-member tier-1 epoch budgets (selection-policy layer): a
+        # policy with ``member_budgets`` maps its score inputs — fleet
+        # epoch times, SoC, the round deadline — to a (K,) budget, so a
+        # slow or drained member trains fewer epochs instead of
+        # stretching the synchronous barrier. The trainer takes epochs
+        # as a per-client dynamic argument, so the budget vector never
+        # retraces the K-wide dispatch. None (every built-in policy)
+        # keeps the scalar schedule budget — the bitwise pre-policy path.
+        ep_k = None
+        if self.policy.member_budgets:
+            ep_k = self.policy.epoch_budgets(
+                self._policy_inputs(None, t, e), e)
+        if ep_k is not None:
+            ep_k = np.asarray(ep_k, np.int32)
+            train_time_k = self.fleet.train_time(ep_k)       # (K,)
+        else:
+            train_time_k = self.fleet.train_time(sched.epochs)   # (K,)
         intra_comm_k = self._t_isl_k * 2.0                   # bidirectional
         done_k = t + train_time_k + intra_comm_k
         ok = energy_ok
@@ -253,7 +269,8 @@ class AutoFLSat(SpaceifiedFL):
                     (K,) + p.shape[1:]), bcast)
         trained = local_sgd_clients(
             cfg.model, stacked, self.ds.x, self.ds.y,
-            keys, e, cfg.batch_size, cfg.lr)
+            keys, ep_k if ep_k is not None else e,
+            cfg.batch_size, cfg.lr)
         if cfg.quant_bits:                   # member -> cluster-head return
             trained = quantize_roundtrip_stacked(trained, cfg.quant_bits)
 
@@ -373,7 +390,8 @@ class AutoFLSat(SpaceifiedFL):
         # cluster-model divergence (paper §5.2): per-cluster accuracies
         return RoundRecord(r, t, t_round_end, t_round_end - t, idle,
                            comm_rec, train_rec, acc, participants,
-                           epochs=float(e), energy_wh=wh,
+                           epochs=float(np.mean(ep_k)) if ep_k is not None
+                           else float(e), energy_wh=wh,
                            skipped_low_power=skipped,
                            comm_s_by_sat={k: float(comm_k[k])
                                           for k in participants},

@@ -67,36 +67,101 @@ def _mean_over_clusters(x):
     return jnp.broadcast_to(m, x.shape).astype(x.dtype)
 
 
-def _quantized_mean_over_clusters(x, bits: int):
-    """QuAFL: per-cluster symmetric uniform quantization before averaging."""
+def _weighted_mean_over_clusters(x, w):
+    """Policy-weighted tier-2 mean: cluster c contributes with weight
+    ``w[c]`` (normalized here). Only used when ``cluster_weights`` is
+    given — the unweighted path keeps the exact ``_mean_over_clusters``
+    reduction, so a None weighting stays bitwise-identical."""
+    ww = w.reshape((-1,) + (1,) * (x.ndim - 1))
+    m = jnp.sum(x.astype(jnp.float32) * ww, axis=0, keepdims=True) \
+        / jnp.sum(w)
+    return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+
+
+def _quantized_mean_over_clusters(x, bits: int, w=None):
+    """QuAFL: per-cluster symmetric uniform quantization before averaging
+    (optionally policy-weighted — the dequantized models are combined
+    with ``w`` exactly like the float path)."""
     qmax = 2.0 ** (bits - 1) - 1.0
     absmax = jnp.max(jnp.abs(x.astype(jnp.float32)),
                      axis=tuple(range(1, x.ndim)), keepdims=True)
     scale = jnp.maximum(absmax, 1e-12) / qmax
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax, qmax)
     deq = q * scale
-    m = jnp.mean(deq, axis=0, keepdims=True)
+    if w is None:
+        m = jnp.mean(deq, axis=0, keepdims=True)
+    else:
+        ww = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        m = jnp.sum(deq * ww, axis=0, keepdims=True) / jnp.sum(w)
     return jnp.broadcast_to(m, x.shape).astype(x.dtype)
 
 
-def make_cluster_sync(cfg, quant_bits: int = 0, sync_opt_state: bool = True):
+def make_cluster_sync(cfg, quant_bits: int = 0, sync_opt_state: bool = True,
+                      cluster_weights=None):
     """Tier-2 AutoFLSat exchange: average states across the cluster axis.
 
     The only collective this step emits is over the ``pod`` mesh axis.
-    """
+    ``cluster_weights``: optional (C,) selection-policy-derived tier-2
+    weights (see :func:`policy_cluster_weights`) — clusters whose
+    members carry larger policy epoch budgets contribute more to the
+    exchanged model, mirroring the data-weighted tier-2 mean of the
+    faithful engine. ``None`` (default) keeps the exact unweighted
+    reduction, bitwise-identical to the pre-policy sync."""
+    w = None if cluster_weights is None else \
+        jnp.asarray(np.asarray(cluster_weights, np.float32))
+
     def sync(state: TrainState) -> TrainState:
         if quant_bits:
-            avg_p = partial(_quantized_mean_over_clusters, bits=quant_bits)
+            avg_p = partial(_quantized_mean_over_clusters, bits=quant_bits,
+                            w=w)
+        elif w is not None:
+            avg_p = partial(_weighted_mean_over_clusters, w=w)
         else:
             avg_p = _mean_over_clusters
+        avg_o = _mean_over_clusters if w is None else \
+            partial(_weighted_mean_over_clusters, w=w)
         params = jax.tree.map(avg_p, state.params)
         opt = state.opt
         if sync_opt_state:
-            opt = {"m": jax.tree.map(_mean_over_clusters, opt["m"]),
-                   "v": jax.tree.map(_mean_over_clusters, opt["v"]),
+            opt = {"m": jax.tree.map(avg_o, opt["m"]),
+                   "v": jax.tree.map(avg_o, opt["v"]),
                    "step": opt["step"]}
         return TrainState(params=params, opt=opt)
     return sync
+
+
+def policy_cluster_weights(plan, hw, policy, epochs: int,
+                           round_deadline_s: float = float("inf"),
+                           energy=None) -> np.ndarray:
+    """Tier-2 sync weights from the selection-policy layer.
+
+    Resolves ``policy`` (a ``repro.core.policy`` name or instance),
+    derives its per-member AutoFLSat tier-1 epoch budgets over the
+    fleet at t=0 (deadline- and SoC-driven; see
+    ``SelectionPolicy.epoch_budgets``), and averages them per cluster,
+    normalized to mean 1 — a cluster full of slow or drained members
+    trains fewer tier-1 steps, so its replica moves less per sync
+    period and its exchanged model should weigh less. A policy with no
+    budget rule (every built-in) yields uniform weights — equivalent to
+    the unweighted sync."""
+    from repro.core.policy import PolicyInputs, resolve_policy
+    from repro.sim.hardware import FleetProfile
+
+    K = plan.constellation.n_sats
+    C = plan.constellation.n_clusters
+    fleet = FleetProfile.build(hw, K)
+    pol = resolve_policy(policy, "scheduled")
+    zeros = np.zeros(K)
+    inp = PolicyInputs(t=0.0, epochs=float(epochs), proj=None, fleet=fleet,
+                       t_up_k=zeros, t_down_k=zeros, clients_per_round=K,
+                       round_deadline_s=float(round_deadline_s),
+                       energy=energy)
+    budgets = pol.epoch_budgets(inp, int(epochs)) \
+        if pol.member_budgets else None
+    if budgets is None:
+        return np.ones(C)
+    w = np.asarray(budgets, np.float64).reshape(C, -1).mean(axis=1)
+    return w / w.mean()
 
 
 # ---------------------------------------------------------------------------

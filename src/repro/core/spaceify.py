@@ -93,6 +93,7 @@ from repro.core.aggregation import (apply_buffered_deltas,
                                     weighted_average)
 from repro.core.client import local_sgd, local_sgd_clients
 from repro.core.contact_plan import ContactPlan
+from repro.core.policy import PolicyInputs, resolve_policy, select_top
 from repro.core.quantize import (quantize_roundtrip,
                                  quantize_roundtrip_stacked, transmit_bytes)
 from repro.models.small import MODELS, accuracy
@@ -152,6 +153,18 @@ class RoundRecord:
                                    # still counts here instead of walking
                                    # the horizon)
     storm_events: int = 0          # correlated storms breaking this round
+    # selection-policy accounting (``FLConfig.policy``; zeros/empty for
+    # the built-in policies, which never defer or demote)
+    policy_deferred: int = 0       # otherwise-eligible candidates the
+                                   # policy deferred or demoted this round
+                                   # (sum of policy_skips values)
+    policy_skips: Dict[str, int] = dataclasses.field(default_factory=dict)
+                                   # per-reason breakdown, e.g.
+                                   # {"eclipse_deferred": 3} — hard skips
+                                   # (energy_aware deferral/critical floor,
+                                   # oracle doomed updates) and soft
+                                   # demotions (deadline_aware storm/miss
+                                   # penalties) both count
 
 
 @dataclasses.dataclass
@@ -184,6 +197,20 @@ class FLConfig:
         ground station), "scheduled" (FLSchedule, Alg. 5: smallest
         contact+return total), or "intra_sl" (FLIntraSL, Alg. 6: weights
         may return via any same-plane peer).
+        ``policy``: the selection-policy layer (``repro.core.policy``).
+        ``None`` (default) resolves to the built-in policy matching
+        ``selection`` — guaranteed bitwise-identical to the pre-policy
+        engine. A registered name ("first_contact" | "scheduled" |
+        "intra_sl" | "deadline_aware" | "energy_aware" | "oracle") or a
+        ``SelectionPolicy`` instance swaps in pluggable scoring +
+        eligibility over the same batched projections: ``deadline_aware``
+        demotes storm-exposed planes and projected deadline misses,
+        ``energy_aware`` replaces the binary SoC floor with soft
+        SoC-weighted scoring + sunlit-arc deferral (and drives FedBuff
+        pickup deferral and AutoFLSat per-member epoch budgets), and
+        ``oracle`` is the clairvoyant fault-resolved baseline. Note
+        ``selection`` still controls the projection/return-route
+        semantics; the policy only scores and gates.
 
     Transmission (QuAFL, PR 2)
         ``quant_bits``: 0 transmits float32; >0 quantizes every model
@@ -270,6 +297,9 @@ class FLConfig:
     buffer_size: int = 5                 # FedBuff D
     staleness_exponent: float = 0.5
     selection: str = "first_contact"     # | "scheduled" | "intra_sl"
+    policy: Optional[object] = None      # selection policy: None (built-in
+                                         # for `selection`, bitwise) | name |
+                                         # SelectionPolicy instance
     quant_bits: int = 0                  # 0 => f32 transmission
     quant_kernel: str = "auto"           # quant_agg route: auto | pallas |
                                          # pallas_interpret | jnp
@@ -350,6 +380,13 @@ class SpaceifiedFL:
         # Byzantine-robust server (FLConfig.aggregator); None => the exact
         # legacy weighted-mean path (guaranteed bitwise-identical)
         self.aggregator = make_robust_aggregator(cfg.aggregator)
+        # selection-policy layer (FLConfig.policy); None resolves to the
+        # built-in policy for cfg.selection — same scores, same masks,
+        # same lexsort: bitwise-identical selection
+        self.policy = resolve_policy(cfg.policy, cfg.selection)
+        # per-reason skip counts of the last selection decision (the
+        # RoundRecord.policy_skips source; {} for built-ins)
+        self._policy_skips: Dict[str, int] = {}
         # deadline/quorum round semantics (graceful degradation). With the
         # inf default nothing below consults the deadline machinery and
         # rounds stay bitwise wait-for-all.
@@ -401,13 +438,25 @@ class SpaceifiedFL:
             return None
         return (w, recv_end, train_end, ret, k)
 
-    def _projected_returns(self, t: float, epochs: float):
+    def _projected_returns(self, t: float, epochs: float, base=None):
         """Batched ``_projected_return`` over every satellite at once:
         one vectorized pass through the contact-plan arrays instead of K
-        sequential Python projections. Returns a dict of (K,) arrays."""
+        sequential Python projections. Returns a dict of (K,) arrays.
+
+        ``base``: a projection dict this engine already computed at the
+        SAME ``t`` (any epoch count). The first-contact query and the
+        energy/fault masks depend only on ``t``, so they are reused
+        verbatim — same arrays, bitwise — and only the epoch-dependent
+        train-end + return-leg query re-runs. FedProx's floor projection
+        rides this, halving its contact-plan passes per round."""
         plan = self.plan
-        avail, end, gs, valid = plan.next_contacts(t)
-        recv_end = avail + self._t_up_k
+        if base is None:
+            avail, end, gs, valid = plan.next_contacts(t)
+            recv_end = avail + self._t_up_k
+        else:
+            avail, end, gs = (base["contact_avail"], base["contact_end"],
+                              base["contact_gs"])
+            valid, recv_end = base["first_valid"], base["recv_end"]
         train_end = recv_end + self.fleet.train_time(epochs)
         if self.cfg.selection == "intra_sl":
             r_avail, r_end, r_gs, relay, r_valid = \
@@ -416,7 +465,9 @@ class SpaceifiedFL:
             r_avail, r_end, r_gs, r_valid = plan.next_contacts(train_end)
             relay = np.arange(len(r_avail))
         orbit_valid = valid & r_valid
-        if self.energy is not None:
+        if base is not None:
+            energy_ok, fault_ok = base["energy_ok"], base["fault_ok"]
+        elif self.energy is not None:
             # battery gating: SoC at selection time must clear the floor.
             # advance_to is idempotent at equal t, so the repeated
             # projections FedProx makes within one round stay consistent.
@@ -424,35 +475,62 @@ class SpaceifiedFL:
             energy_ok = self.energy.eligible()
         else:
             energy_ok = np.ones(len(orbit_valid), bool)
-        if self.faults is not None:
-            # outage gating: a satellite inside a fault outage at selection
-            # time is masked exactly like one below the battery floor —
-            # boolean AND into the same validity mask (composition order
-            # is immaterial), zero-weight pad slot, no retracing.
-            fault_ok = self.faults.available(t)
-        else:
-            fault_ok = np.ones(len(orbit_valid), bool)
+        if base is None:
+            if self.faults is not None:
+                # outage gating: a satellite inside a fault outage at
+                # selection time is masked exactly like one below the
+                # battery floor — boolean AND into the same validity mask
+                # (composition order is immaterial), zero-weight pad
+                # slot, no retracing.
+                fault_ok = self.faults.available(t)
+            else:
+                fault_ok = np.ones(len(orbit_valid), bool)
         return {"contact_avail": avail, "contact_end": end, "contact_gs": gs,
                 "recv_end": recv_end, "train_end": train_end,
                 "ret_avail": r_avail, "ret_end": r_end, "ret_gs": r_gs,
                 "relay": relay, "valid": orbit_valid & energy_ok & fault_ok,
                 "orbit_valid": orbit_valid, "energy_ok": energy_ok,
-                "fault_ok": fault_ok}
+                "fault_ok": fault_ok, "first_valid": valid}
 
-    def _select_from_projections(self, proj) -> List[int]:
+    def _policy_inputs(self, proj, t: float, epochs: float) -> PolicyInputs:
+        """Bundle the batched score inputs for the selection policy."""
+        return PolicyInputs(t=float(t), epochs=float(epochs), proj=proj,
+                            fleet=self.fleet, t_up_k=self._t_up_k,
+                            t_down_k=self._t_down_k,
+                            clients_per_round=self.cfg.clients_per_round,
+                            round_deadline_s=self.cfg.round_deadline_s,
+                            energy=self.energy, faults=self.faults,
+                            engine=self)
+
+    def _select_from_projections(self, proj, t: Optional[float] = None,
+                                 epochs: Optional[float] = None
+                                 ) -> List[int]:
+        """Policy-layer selection over a batched projection: the policy
+        scores + gates the fleet, ``select_top`` picks the lowest
+        ``clients_per_round`` scores with the (score, sat-index)
+        tie-break. The built-in policies reproduce the pre-policy
+        branches bitwise (same arrays, same lexsort). The decision's
+        per-reason skip counts are stashed on ``_policy_skips`` for the
+        round record."""
         cfg = self.cfg
-        if cfg.selection == "first_contact":
-            score = proj["contact_avail"]          # first to make contact
-        else:                                      # scheduled / intra_sl
-            score = proj["ret_avail"] + self._t_down_k  # contact+return
-        ks = np.nonzero(proj["valid"])[0]
-        order = np.lexsort((ks, score[ks]))        # score, then sat index
-        m = min(cfg.clients_per_round, len(ks))
-        return [int(k) for k in ks[order][:m]]
+        if t is None:
+            # legacy single-arg call (retained ref engines subclass this):
+            # the projection was taken at cfg.epochs from the selection
+            # clock; only contact_avail-relative scores use t, and every
+            # shipped policy scores on absolute projection times, so the
+            # round start is recoverable from the projection itself
+            t = float(np.min(proj["contact_avail"]))
+        decision = self.policy.decide(
+            self._policy_inputs(proj, t, cfg.epochs
+                                if epochs is None else epochs))
+        self._policy_skips = {k: int(v) for k, v in decision.skips.items()
+                              if v}
+        return select_top(decision.score, decision.eligible,
+                          cfg.clients_per_round)
 
     def select_clients(self, t: float) -> List[int]:
         return self._select_from_projections(
-            self._projected_returns(t, self.cfg.epochs))
+            self._projected_returns(t, self.cfg.epochs), t)
 
     # -- transmission (live QuAFL wire format) ---------------------------
     def _tx_global(self):
@@ -891,7 +969,8 @@ class FedAvgSat(SpaceifiedFL):
     def run_round(self, r, t):
         cfg = self.cfg
         proj = self._projected_returns(t, cfg.epochs)
-        sel = self._select_from_projections(proj)
+        sel = self._select_from_projections(proj, t)
+        pol_skips = self._policy_skips
         if not sel:
             return None
         # train selected clients (padded cohort, same epoch count:
@@ -953,7 +1032,9 @@ class FedAvgSat(SpaceifiedFL):
                            clipped_updates=n_clip, deadline_expired=n_exp,
                            stragglers_carried=n_strag,
                            retries_exhausted=n_rex,
-                           storm_events=self._storms_in(t, t_round_end))
+                           storm_events=self._storms_in(t, t_round_end),
+                           policy_deferred=sum(pol_skips.values()),
+                           policy_skips=pol_skips)
 
 
 class FedProxSat(SpaceifiedFL):
@@ -970,12 +1051,25 @@ class FedProxSat(SpaceifiedFL):
 
     def run_round(self, r, t):
         cfg = self.cfg
-        sel = self.select_clients(t)
+        proj = self._projected_returns(t, cfg.epochs)
+        sel = self._select_from_projections(proj, t)
+        pol_skips = self._policy_skips
         if not sel:
             return None
         floor_ep = max(cfg.min_epochs, 1)
-        projf = self._projected_returns(t, floor_ep)
-        sel = [k for k in sel if projf["valid"][k]]
+        # ONE contact-plan pass per round: the floor projection reuses
+        # the selection projection's first-contact query + energy/fault
+        # masks (identical at the same t — bitwise), re-running only the
+        # epoch-dependent return leg; when the floor equals the selection
+        # epoch count the projections coincide entirely.
+        projf = proj if floor_ep == cfg.epochs else \
+            self._projected_returns(t, floor_ep, base=proj)
+        # refilter under the floor projection through the policy's
+        # eligibility (for the built-ins this IS projf["valid"] — the
+        # exact pre-policy refilter)
+        floor_ok = self.policy.decide(
+            self._policy_inputs(projf, t, floor_ep)).eligible
+        sel = [k for k in sel if floor_ok[k]]
         if not sel:
             return None
         ks = np.asarray(sel)
@@ -1037,7 +1131,9 @@ class FedProxSat(SpaceifiedFL):
                            clipped_updates=n_clip, deadline_expired=n_exp,
                            stragglers_carried=n_strag,
                            retries_exhausted=n_rex,
-                           storm_events=self._storms_in(t, t_round_end))
+                           storm_events=self._storms_in(t, t_round_end),
+                           policy_deferred=sum(pol_skips.values()),
+                           policy_skips=pol_skips)
 
 
 class FedBuffSat(SpaceifiedFL):
@@ -1125,13 +1221,29 @@ class FedBuffSat(SpaceifiedFL):
         # which next_contacts reports as invalid.
         tq = np.full(K, t0)
         rex_seed = 0        # retry-budget exhaustions during seeding
+        def_seed = 0        # policy eclipse-deferrals during seeding
         if self.energy is not None:
             self.energy.advance_to(t0)
-            drained = np.nonzero(~self.energy.eligible())[0]
-            if len(drained):
-                rts = self.energy.recover_times(drained)
-                tq[drained] = np.where(np.isfinite(rts),
-                                       np.maximum(rts, t0), np.inf)
+            if self.policy.defers_in_eclipse:
+                # the policy's sunlit-arc deferral replaces the binary
+                # floor at seeding: a satellite in eclipse below the
+                # defer threshold schedules its first pickup from its
+                # sunrise (solar income) instead of the floor-recovery
+                # walk; one held dark forever sits the run out
+                soc = self.energy.soc_frac()
+                defer = ~self.energy.sunlit_at(t0) \
+                    & (soc < self.policy.defer_soc)
+                if defer.any():
+                    sr = self.energy.sunrise_after(t0)
+                    tq[defer] = np.where(np.isfinite(sr[defer]),
+                                         np.maximum(sr[defer], t0), np.inf)
+                    def_seed = int(defer.sum())
+            else:
+                drained = np.nonzero(~self.energy.eligible())[0]
+                if len(drained):
+                    rts = self.energy.recover_times(drained)
+                    tq[drained] = np.where(np.isfinite(rts),
+                                           np.maximum(rts, t0), np.inf)
         if self.faults is None:
             avail, _, _, valid = plan.next_contacts(tq)
             recv_end_k = avail + self._t_up_k
@@ -1190,7 +1302,7 @@ class FedBuffSat(SpaceifiedFL):
         idle_acc, comm_acc, train_acc, n_ev = 0.0, 0.0, 0.0, 0
         energy_acc, skip_acc = 0.0, 0
         fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
-        corr_acc, rex_acc = 0, rex_seed
+        corr_acc, rex_acc, def_acc = 0, rex_seed, def_seed
         comm_by: Dict[int, float] = {}
         while queue and r < max_rounds:
             ev = queue.pop()
@@ -1262,7 +1374,26 @@ class FedBuffSat(SpaceifiedFL):
                                   + deferred_up.pop(k, 0.0)]))
                 elig = self.energy.eligible()
                 timeline.note_eligibility(elig, t_ret)
-                if not elig[k]:
+                if self.policy.defers_in_eclipse:
+                    # the policy's sunlit-arc deferral replaces the
+                    # binary floor stand-down: in eclipse below the
+                    # defer threshold, the next pickup waits for this
+                    # satellite's sunrise (when solar income resumes)
+                    # instead of walking to the SoC-floor recovery
+                    if float(self.energy.soc_frac()[k]) \
+                            < self.policy.defer_soc \
+                            and not bool(self.energy.sunlit_at(t_ret)[k]):
+                        def_acc += 1
+                        stood_down = True
+                        sr = float(self.energy.sunrise_after(t_ret)[k])
+                        w2 = self._next_available_contact(
+                            k, max(sr, recv_end)) if np.isfinite(sr) \
+                            else None
+                        if w2 is None:
+                            requeue = False  # dark forever: drops out
+                        else:
+                            recv_end = w2[0] + t_up
+                elif not elig[k]:
                     # drained below the floor: stand down until idle+solar
                     # recovers, then rejoin at the next contact after that.
                     # The deferred pickup's uplink is billed where it
@@ -1344,12 +1475,15 @@ class FedBuffSat(SpaceifiedFL):
                     dropped_contacts=drop_acc, retransmit_bytes=rebill_acc,
                     corrupted_updates=corr_acc, clipped_updates=n_clip,
                     retries_exhausted=rex_acc,
-                    storm_events=self._storms_in(t_round_start, t_ret)))
+                    storm_events=self._storms_in(t_round_start, t_ret),
+                    policy_deferred=def_acc,
+                    policy_skips={"eclipse_deferred": def_acc}
+                    if def_acc else {}))
                 t_round_start = t_ret
                 idle_acc = comm_acc = train_acc = 0.0
                 energy_acc, skip_acc = 0.0, 0
                 fault_acc, drop_acc, rebill_acc = 0, 0, 0.0
-                corr_acc, rex_acc = 0, 0
+                corr_acc, rex_acc, def_acc = 0, 0, 0
                 comm_by = {}
                 n_ev = 0
                 r += 1

@@ -23,6 +23,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import save_pytree
 from repro.configs import get_config, get_smoke_config
@@ -72,6 +73,13 @@ def main():
                     help="with --hfl --sync-every orbit: report whether the "
                          "derived schedule's duty cycle fits the eclipse-"
                          "aware power budget of the simulated constellation")
+    ap.add_argument("--policy", default="",
+                    help="with --hfl --sync-every orbit: selection policy "
+                         "(repro.core.policy name, e.g. deadline_aware) — "
+                         "derives per-member tier-1 step budgets over the "
+                         "simulated fleet and weights the tier-2 cluster "
+                         "sync accordingly; empty keeps the uniform "
+                         "(bitwise pre-policy) sync")
     args = ap.parse_args()
 
     cfg = build_cfg(args)
@@ -83,8 +91,11 @@ def main():
         nc = args.clusters
         state = H.init_hfl_state(key, cfg, nc)
         local = jax.jit(H.make_hfl_local_step(cfg, opt_cfg), donate_argnums=0)
-        sync = jax.jit(H.make_cluster_sync(cfg, quant_bits=args.quant_bits),
-                       donate_argnums=0)
+        cluster_w = None
+        if args.policy and args.sync_every != "orbit":
+            raise SystemExit("--policy needs --hfl --sync-every orbit (the "
+                             "policy budgets are derived from the simulated "
+                             "fleet and ISL schedule)")
         if args.sync_every == "orbit":
             from repro.core.contact_plan import build_contact_plan
             from repro.core.quantize import transmit_bytes
@@ -114,6 +125,15 @@ def main():
                 step_time_s=1.0)
             print(f"[hfl] ISL schedule ({args.fleet}) => sync every "
                   f"H={h_sync} steps")
+            if args.policy:
+                w = H.policy_cluster_weights(plan, fleet, args.policy,
+                                             epochs=h_sync)
+                if not np.allclose(w, 1.0):
+                    cluster_w = w
+                print(f"[hfl] policy '{args.policy}': tier-2 cluster "
+                      f"weights = {[round(float(x), 3) for x in w]}"
+                      + ("" if cluster_w is not None
+                         else " (uniform => exact unweighted sync)"))
             if args.power_check:
                 from repro.orbit.eclipse import mean_eclipse_fraction
                 from repro.sim.hardware import oap_added_mw, power_feasible
@@ -140,6 +160,9 @@ def main():
                           f"{verdict}")
         else:
             h_sync = int(args.sync_every)
+        sync = jax.jit(H.make_cluster_sync(cfg, quant_bits=args.quant_bits,
+                                           cluster_weights=cluster_w),
+                       donate_argnums=0)
         # each cluster sees its own (non-IID) stream
         streams = [synthetic_lm_batches(cfg.vocab, args.batch, args.seq,
                                         args.steps, seed=args.seed + 17 * c)

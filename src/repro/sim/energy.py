@@ -401,6 +401,39 @@ class EnergySim:
         """(K,) state of charge as a fraction of capacity."""
         return self.soc_wh / np.maximum(self.cap_wh, 1e-12)
 
+    def _counts_at(self, t: float) -> np.ndarray:
+        """(K,) terminator crossings at or before ``t`` per satellite
+        (a pure read of the globally time-sorted transition view; the
+        integration cursors are untouched)."""
+        gp = int(np.searchsorted(self._g_t, float(t), side="right"))
+        return np.bincount(self._g_sat[:gp], minlength=self._K)
+
+    def sunlit_at(self, t: float) -> np.ndarray:
+        """(K,) bool: which satellites are in sunlight at ``t``. A pure
+        query of the packed eclipse series (selection-policy score
+        input) — never advances the battery integration."""
+        return self._init_sun ^ ((self._counts_at(t) % 2) == 1)
+
+    def sunrise_after(self, t: float) -> np.ndarray:
+        """(K,) earliest time >= ``t`` each satellite is sunlit: ``t``
+        itself when already in sun, its next dark→sun terminator
+        crossing otherwise, ``np.inf`` for a satellite whose final
+        (held-forever) state is eclipse. The sunlit-arc deferral target
+        of the ``energy_aware`` selection policy. Pure query."""
+        p = self._counts_at(t)
+        sunlit = self._init_sun ^ ((p % 2) == 1)
+        out = np.full(self._K, float(t))
+        if self._ntrans:
+            idx = self._off[:-1] + p
+            has = p < self._counts
+            nxt = np.where(has,
+                           self._trans[np.clip(idx, 0, self._ntrans - 1)],
+                           np.inf)
+        else:
+            nxt = np.full(self._K, np.inf)
+        out[~sunlit] = nxt[~sunlit]
+        return out
+
     def eligible(self) -> np.ndarray:
         """(K,) bool: SoC at or above the participation floor."""
         return self.soc_wh >= self.min_soc * self.cap_wh - 1e-12

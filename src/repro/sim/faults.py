@@ -600,6 +600,26 @@ class FaultSim:
         act = (sp <= tq[:, None]) & (tq[:, None] < ep)
         return np.max(np.where(act, sv, 0.0), axis=1)
 
+    def storm_exposure(self, ks, t_from, t_to) -> np.ndarray:
+        """Batched interval query: for each satellite ``ks[i]``, the max
+        severity of any storm over its cluster whose active span
+        ``[t_start, t_end)`` overlaps ``[t_from[i], t_to[i])`` (0 where
+        the interval is clear). The ``deadline_aware`` selection
+        policy's storm-avoidance input: a candidate is "exposed" when
+        its contact→projected-delivery interval intersects a storm
+        footprint, whether the storm is already raging or forecast to
+        break mid-flight. A pure query of the padded per-cluster storm
+        arrays — no RNG, no state."""
+        ks = np.asarray(ks, np.int64)
+        if not self._storms:
+            return np.zeros(ks.shape)
+        a = np.broadcast_to(np.asarray(t_from, np.float64), ks.shape)
+        b = np.broadcast_to(np.asarray(t_to, np.float64), ks.shape)
+        cs = self.cluster_of[ks]
+        sp, ep, sv = self._stm_start[cs], self._stm_end[cs], self._stm_sev[cs]
+        act = (sp < b[:, None]) & (ep > a[:, None])
+        return np.max(np.where(act, sv, 0.0), axis=1)
+
     def storms_between(self, t_from: float, t_to: float) -> int:
         """Count of storms *beginning* in ``(t_from, t_to]`` — the
         per-round ``RoundRecord.storm_events`` counter (each storm is

@@ -46,6 +46,10 @@ class SimConfig:
     to the primary-profile engine.
     ``epochs_mode``: AutoFLSat only — "fixed" uses ``fl.epochs``, "auto"
     derives the budget from the ISL exchange schedule (Algorithm 2).
+    ``policy``: selection policy for the run (``repro.core.policy``
+    name or instance); ``None`` keeps ``fl.policy`` as configured —
+    usually the built-in for ``fl.selection``, bitwise-identical to the
+    pre-policy engine. Setting it overrides ``fl.policy``.
     ``seed``: dataset partition seed (``fl.seed`` drives training). With
     ``fl.faults`` set and ``fl.faults.seed`` left at ``None``, this seed
     is also threaded into the fault stream — one experiment seed then
@@ -67,6 +71,7 @@ class SimConfig:
     fl: FLConfig = dataclasses.field(default_factory=FLConfig)
     fleet: Optional[object] = None       # per-sat profiles / FleetProfile
     epochs_mode: str = "fixed"           # autoflsat: "fixed" | "auto"
+    policy: Optional[object] = None      # selection policy override
     seed: int = 0
 
 
@@ -154,6 +159,21 @@ class SimResult:
         over rounds (0 with ``storms=None``)."""
         return int(sum(r.storm_events for r in self.records))
 
+    def total_policy_deferred(self) -> int:
+        """Otherwise-eligible candidates the selection policy deferred
+        or demoted, summed over rounds (0 for the built-in policies)."""
+        return int(sum(r.policy_deferred for r in self.records))
+
+    def policy_skip_reasons(self) -> dict:
+        """Per-reason policy skip counts merged over rounds, e.g.
+        ``{"eclipse_deferred": 7, "storm_exposed": 3}`` ({} for the
+        built-in policies, which never defer)."""
+        merged: dict = {}
+        for r in self.records:
+            for reason, n in r.policy_skips.items():
+                merged[reason] = merged.get(reason, 0) + int(n)
+        return merged
+
     def summary(self) -> dict:
         return {
             "algorithm": self.config.algorithm,
@@ -177,6 +197,8 @@ class SimResult:
             "stragglers_carried": self.total_stragglers_carried(),
             "retries_exhausted": self.total_retries_exhausted(),
             "storm_events": self.total_storm_events(),
+            "policy_deferred": self.total_policy_deferred(),
+            "policy_skips": self.policy_skip_reasons(),
         }
 
 
@@ -206,6 +228,10 @@ class FLySTacK:
             # numpy stream independent of fl.seed's JAX training keys)
             fl = dataclasses.replace(
                 fl, faults=dataclasses.replace(fl.faults, seed=cfg.seed))
+        if cfg.policy is not None:
+            # experiment-level selection-policy override (name/instance;
+            # None leaves fl.policy — the bitwise built-in — untouched)
+            fl = dataclasses.replace(fl, policy=cfg.policy)
         if cfg.algorithm == "autoflsat":
             algo = AutoFLSat(self.plan, self.hw, self.dataset, fl,
                              epochs_mode=cfg.epochs_mode)

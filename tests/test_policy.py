@@ -1,0 +1,305 @@
+"""Selection-policy layer: built-in bitwise parity, registry resolution,
+the deadline/energy/oracle policy behaviors, AutoFLSat per-member epoch
+budgets, FedBuff eclipse deferral, and the policy-weighted tier-2 sync.
+
+The built-ins must be *bitwise* re-expressions of the legacy
+``cfg.selection`` branches — same records, same global params — and the
+new policies must actually change who trains (and say why, via
+``RoundRecord.policy_skips``)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import hierarchy as H
+from repro.core.autoflsat import AutoFLSat
+from repro.core.client import clear_train_caches, train_cache_sizes
+from repro.core.contact_plan import build_contact_plan
+from repro.core.policy import (POLICIES, DeadlineAwarePolicy,
+                               EnergyAwarePolicy, PolicyInputs,
+                               ScheduledPolicy, SelectionPolicy,
+                               resolve_policy, select_top)
+from repro.core.spaceify import (EnergyConfig, FedAvgSat, FedBuffSat,
+                                 FedProxSat, FLConfig)
+from repro.data.synthetic import make_federated_dataset
+from repro.sim.faults import FaultConfig, StormConfig, StormEvent
+from repro.sim.energy import mixed_fleet
+from repro.sim.flystack import FLySTacK, SimConfig
+from repro.sim.hardware import FLYCUBE, SMALLSAT_SBAND, FleetProfile
+
+C, SPC, GS = 2, 3, 2
+K = C * SPC
+HORIZON_S = 0.5 * 86_400
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return build_contact_plan(C, SPC, GS, horizon_s=HORIZON_S, dt_s=60.0)
+
+
+@pytest.fixture(scope="module")
+def plan_isl():
+    return build_contact_plan(C, SPC, GS, horizon_s=HORIZON_S, dt_s=60.0,
+                              with_isl_pairs=True)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_federated_dataset("femnist", K, 16)
+
+
+def _cfg(**kw):
+    kw.setdefault("model", "mlp")
+    kw.setdefault("clients_per_round", 2)
+    kw.setdefault("epochs", 2)
+    kw.setdefault("batch_size", 16)
+    kw.setdefault("max_rounds", 2)
+    kw.setdefault("max_local_epochs", 6)
+    kw.setdefault("lr", 0.05)
+    return FLConfig(**kw)
+
+
+def _rec_key(rec):
+    d = dataclasses.asdict(rec)
+    d["participants"] = tuple(d["participants"])
+    d["policy_skips"] = tuple(sorted(d["policy_skips"].items()))
+    return tuple((k, d[k]) for k in sorted(d)
+                 if not isinstance(d[k], (list, dict)))
+
+
+def _bitwise(a, b):
+    import jax
+    return all((np.asarray(x) == np.asarray(y)).all()
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# built-in parity + resolution
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine,selection", [
+    (FedAvgSat, "first_contact"),
+    (FedAvgSat, "scheduled"),
+    (FedAvgSat, "intra_sl"),
+    (FedProxSat, "scheduled"),
+])
+def test_builtin_policy_bitwise(plan, ds, engine, selection):
+    base = engine(plan, SMALLSAT_SBAND, ds, _cfg(selection=selection))
+    recs = base.run()
+    expl = engine(plan, SMALLSAT_SBAND, ds,
+                  _cfg(selection=selection, policy=selection))
+    recs2 = expl.run()
+    assert recs, "parity run produced no rounds"
+    assert [_rec_key(r) for r in recs] == [_rec_key(r) for r in recs2]
+    assert _bitwise(base.global_params, expl.global_params)
+    assert all(r.policy_deferred == 0 and r.policy_skips == {}
+               for r in recs2)
+
+
+def test_resolve_policy_contract():
+    for sel in ("first_contact", "scheduled", "intra_sl"):
+        assert isinstance(resolve_policy(None, sel), SelectionPolicy)
+    inst = DeadlineAwarePolicy(comm_weight=0.0)
+    assert resolve_policy(inst, "scheduled") is inst
+    assert type(resolve_policy("oracle", "scheduled")) is POLICIES["oracle"]
+    with pytest.raises(ValueError, match="unknown selection policy"):
+        resolve_policy("no_such_policy", "scheduled")
+    with pytest.raises(ValueError, match="unknown FLConfig.selection"):
+        resolve_policy(None, "no_such_selection")
+    with pytest.raises(TypeError):
+        resolve_policy(42, "scheduled")
+
+
+def test_select_top_rule():
+    score = np.array([5.0, 1.0, 1.0, 0.5, 9.0])
+    elig = np.array([True, True, True, False, True])
+    # lowest eligible scores win; the 1.0 tie breaks by satellite index
+    assert select_top(score, elig, 3) == [1, 2, 0]
+    assert select_top(score, elig, 10) == [1, 2, 0, 4]   # width clipped
+    assert select_top(score, np.zeros(5, bool), 3) == []
+
+
+# ---------------------------------------------------------------------------
+# FedProx: one full projection per round (the reused-base fast path)
+# ---------------------------------------------------------------------------
+
+
+def test_fedprox_projects_once_per_round(plan, ds):
+    calls = []
+
+    class Counting(FedProxSat):
+        def _projected_returns(self, t, epochs, base=None):
+            calls.append(base is None)
+            return super()._projected_returns(t, epochs, base=base)
+
+    algo = Counting(plan, SMALLSAT_SBAND, ds,
+                    _cfg(selection="scheduled", min_epochs=0))
+    recs = algo.run()
+    assert recs
+    # one FULL projection per round; the floor pass reuses its contact
+    # legs (base is not None) instead of re-walking the plan
+    assert calls.count(True) == len(recs)
+    assert calls.count(False) == len(recs)
+
+    ref = FedProxSat(plan, SMALLSAT_SBAND, ds,
+                     _cfg(selection="scheduled", min_epochs=0))
+    ref_recs = ref.run()
+    assert [_rec_key(r) for r in recs] == [_rec_key(r) for r in ref_recs]
+    assert _bitwise(algo.global_params, ref.global_params)
+
+
+# ---------------------------------------------------------------------------
+# deadline_aware / oracle under a scripted storm
+# ---------------------------------------------------------------------------
+
+
+def _storm_cfg(**kw):
+    storm = StormConfig(events=(StormEvent(t_start=0.0,
+                                           duration_s=HORIZON_S,
+                                           cluster=0, severity=1.0),),
+                        outage_prob=0.0, drop_prob=1.0)
+    return _cfg(selection="scheduled",
+                faults=FaultConfig(seed=0, storms=storm), **kw)
+
+
+def test_deadline_aware_avoids_storm_plane(plan, ds):
+    algo = FedAvgSat(plan, SMALLSAT_SBAND, ds,
+                     _storm_cfg(policy="deadline_aware", max_rounds=1))
+    recs = algo.run()
+    assert recs
+    # cluster 0 is storm-struck for the whole horizon: the cohort must
+    # come from cluster 1, and the demotions must be accounted
+    assert all(k >= SPC for k in recs[0].participants)
+    assert recs[0].policy_skips.get("storm_exposed", 0) > 0
+    assert recs[0].policy_deferred >= recs[0].policy_skips["storm_exposed"]
+
+
+def test_oracle_refuses_doomed_updates(plan, ds):
+    algo = FedAvgSat(plan, SMALLSAT_SBAND, ds,
+                     _storm_cfg(policy="oracle", max_rounds=1))
+    recs = algo.run()
+    assert recs
+    # drop_prob 1.0 over cluster 0: those walks provably never deliver
+    assert all(k >= SPC for k in recs[0].participants)
+    assert recs[0].policy_skips.get("doomed_update", 0) > 0
+
+
+def test_deadline_aware_budgets_fit_the_deadline():
+    fleet = FleetProfile.from_profiles(mixed_fleet(
+        (FLYCUBE, SMALLSAT_SBAND), 6))      # epoch_time 20 s / 5 s
+    pol = DeadlineAwarePolicy()
+    inp = PolicyInputs(t=0.0, epochs=2.0, proj=None, fleet=fleet,
+                       t_up_k=np.zeros(6), t_down_k=np.zeros(6),
+                       clients_per_round=6, round_deadline_s=40.0)
+    assert pol.epoch_budgets(inp, 8).tolist() == [2, 8, 2, 8, 2, 8]
+    # infinite deadline: budget is the fleet-median wall time, so the
+    # slow half trains less and the fast half is capped at `epochs`
+    inp = dataclasses.replace(inp, round_deadline_s=float("inf"))
+    assert pol.epoch_budgets(inp, 2).tolist() == [1, 2, 1, 2, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# energy_aware: the floor as a policy choice
+# ---------------------------------------------------------------------------
+
+
+def test_energy_aware_trains_where_the_floor_starves(plan):
+    # the whole fleet starts below the binary floor: the legacy engine
+    # has no eligible candidate and terminates with zero rounds, while
+    # the soft policy trains the sunlit arc and defers the eclipsed
+    energy = EnergyConfig(battery_capacity_wh=1.5, initial_soc=0.4,
+                          min_soc=0.45)
+    fl = _cfg(selection="scheduled", energy=energy, max_rounds=3)
+    sim = dict(algorithm="fedavg_sch", n_clusters=C, sats_per_cluster=SPC,
+               n_ground_stations=GS, horizon_days=0.5, n_per_client=16,
+               model="mlp")
+    floor = FLySTacK(SimConfig(fl=fl, **sim), plan=plan).run()
+    aware = FLySTacK(SimConfig(fl=fl, policy="energy_aware", **sim),
+                     plan=plan).run()
+    assert floor.summary()["rounds"] == 0
+    assert aware.summary()["rounds"] == 3
+    assert aware.summary()["policy_skips"].get("eclipse_deferred", 0) > 0
+    assert aware.total_policy_deferred() > 0
+
+
+def test_energy_aware_budgets_scale_with_soc():
+    class FakeEnergy:
+        def advance_to(self, t):
+            pass
+
+        def soc_frac(self):
+            return np.array([1.0, 0.4, 0.01])
+
+    pol = EnergyAwarePolicy()
+    inp = PolicyInputs(t=0.0, epochs=4.0, proj=None, fleet=None,
+                       t_up_k=np.zeros(3), t_down_k=np.zeros(3),
+                       clients_per_round=3, round_deadline_s=float("inf"),
+                       energy=FakeEnergy())
+    assert pol.epoch_budgets(inp, 4).tolist() == [4, 2, 1]
+    assert pol.epoch_budgets(
+        dataclasses.replace(inp, energy=None), 4) is None
+
+
+def test_fedbuff_defers_pickups_into_sunlight(plan, ds):
+    energy = EnergyConfig(battery_capacity_wh=1.5, initial_soc=0.4,
+                          min_soc=0.45)
+    algo = FedBuffSat(plan, SMALLSAT_SBAND, ds,
+                      _cfg(selection="first_contact", energy=energy,
+                           policy="energy_aware", buffer_size=2,
+                           max_rounds=3))
+    recs = algo.run()
+    assert recs
+    total = sum(r.policy_skips.get("eclipse_deferred", 0) for r in recs)
+    assert total > 0
+
+
+# ---------------------------------------------------------------------------
+# AutoFLSat per-member budgets + policy-weighted tier-2 sync
+# ---------------------------------------------------------------------------
+
+
+def test_autoflsat_member_epoch_budgets(plan_isl, ds):
+    fleet = FleetProfile.from_profiles(mixed_fleet(
+        (FLYCUBE, SMALLSAT_SBAND), K))
+    base_cfg = _cfg(selection="first_contact", epochs=2, max_rounds=1)
+    clear_train_caches()
+    base = AutoFLSat(plan_isl, fleet, ds, base_cfg)
+    (rec,) = base.run()
+    assert rec.epochs == 2.0                 # scalar pre-policy budget
+
+    clear_train_caches()
+    pol = AutoFLSat(plan_isl, fleet, ds,
+                    dataclasses.replace(base_cfg, policy="deadline_aware"))
+    (rec_p,) = pol.run()
+    # budgets [1, 2, 1, 2, ...] on the mixed fleet (median wall time)
+    assert rec_p.epochs == 1.5
+    # the per-member epoch vector is a dynamic arg: no retrace
+    assert train_cache_sizes()["local_sgd_clients"] == 1
+
+
+def test_policy_cluster_weights(plan_isl):
+    w = H.policy_cluster_weights(plan_isl, SMALLSAT_SBAND, "scheduled",
+                                 epochs=4)
+    assert np.array_equal(w, np.ones(C))     # budget-less built-in
+    # cluster 0 all-FLYCUBE, cluster 1 all-S-band: budgets [1]*3 + [2]*3
+    fleet = (FLYCUBE,) * SPC + (SMALLSAT_SBAND,) * SPC
+    w = H.policy_cluster_weights(plan_isl, fleet, "deadline_aware",
+                                 epochs=2)
+    assert np.allclose(w, [2.0 / 3.0, 4.0 / 3.0])
+    assert np.isclose(w.mean(), 1.0)
+
+
+def test_weighted_cluster_mean_matches_unweighted_at_uniform():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((3, 4, 5)).astype(np.float32)
+    import jax.numpy as jnp
+    xj = jnp.asarray(x)
+    uni = H._weighted_mean_over_clusters(xj, jnp.ones(3))
+    assert np.allclose(np.asarray(uni),
+                       np.asarray(H._mean_over_clusters(xj)), atol=1e-6)
+    w = jnp.asarray(np.array([1.0, 2.0, 3.0], np.float32))
+    got = np.asarray(H._weighted_mean_over_clusters(xj, w))[0]
+    want = (x * np.array([1, 2, 3]).reshape(3, 1, 1)).sum(0) / 6.0
+    assert np.allclose(got, want, atol=1e-5)

@@ -53,6 +53,31 @@ def test_summary_sums_fault_and_energy_counters():
     assert s["sats_per_cluster"] == 3 and s["ground_stations"] == 2
 
 
+def test_summary_merges_policy_counters():
+    recs = [
+        _rec(0, 0.0, 3600.0, 0.10, policy_deferred=3,
+             policy_skips={"eclipse_deferred": 2, "storm_exposed": 1}),
+        _rec(1, 3600.0, 7200.0, 0.20, policy_deferred=2,
+             policy_skips={"eclipse_deferred": 1, "critical_soc": 1}),
+        _rec(2, 7200.0, 9000.0, 0.25),      # built-in round: no skips
+    ]
+    res = _result(recs)
+    assert res.total_policy_deferred() == 5
+    assert res.policy_skip_reasons() == {"eclipse_deferred": 3,
+                                         "storm_exposed": 1,
+                                         "critical_soc": 1}
+    s = res.summary()
+    assert s["policy_deferred"] == 5
+    assert s["policy_skips"] == {"eclipse_deferred": 3, "storm_exposed": 1,
+                                 "critical_soc": 1}
+
+
+def test_summary_policy_counters_default_to_empty():
+    s = _result([_rec(0, 0.0, 1800.0, 0.2)]).summary()
+    assert s["policy_deferred"] == 0 and s["policy_skips"] == {}
+    assert _result([]).summary()["policy_skips"] == {}
+
+
 def test_summary_counters_default_to_zero_without_subsystems():
     s = _result([_rec(0, 0.0, 1800.0, 0.2)]).summary()
     for key in ("skipped_low_power", "skipped_faulted", "dropped_contacts",

@@ -1,7 +1,10 @@
 #!/usr/bin/env python
 """Docs rot check (CI): every relative markdown link and every quoted
 `python <path>.py` command in README.md and docs/*.md must point at a
-file that exists in the repo."""
+file that exists in the repo, and the README's benchmark table must
+stay in sync with the checked-in `BENCH_*.json` baselines (every
+mentioned baseline exists; every checked-in baseline is documented —
+CI's `*_smoke.json` artifacts are exempt)."""
 from __future__ import annotations
 
 import pathlib
@@ -13,6 +16,24 @@ LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)\)")
 SCRIPT_RE = re.compile(r"python\s+([\w./-]+\.py)")
 PATH_RE = re.compile(r"`((?:src|tests|benchmarks|examples|docs|tools)/"
                      r"[\w./-]+)`")
+BENCH_RE = re.compile(r"\b(BENCH_[\w-]+\.json)\b")
+
+
+def bench_sync_problems() -> list:
+    """README <-> checked-in benchmark baseline cross-check."""
+    readme = (ROOT / "README.md").read_text()
+    mentioned = {m.group(1) for m in BENCH_RE.finditer(readme)
+                 if not m.group(1).endswith("_smoke.json")}
+    checked_in = {p.name for p in ROOT.glob("BENCH_*.json")
+                  if not p.name.endswith("_smoke.json")}
+    problems = []
+    for name in sorted(mentioned - checked_in):
+        problems.append(f"README.md: benchmark row references {name} "
+                        "but no such baseline is checked in")
+    for name in sorted(checked_in - mentioned):
+        problems.append(f"{name}: checked-in baseline has no README.md "
+                        "benchmark row")
+    return problems
 
 
 def main() -> int:
@@ -34,6 +55,7 @@ def main() -> int:
                 path = m.group(1).rstrip("/")
                 if not (ROOT / path).exists():
                     problems.append(f"{rel}: {what} missing -> {path}")
+    problems += bench_sync_problems()
     if problems:
         print("\n".join(problems))
         return 1
